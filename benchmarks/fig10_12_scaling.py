@@ -1,0 +1,56 @@
+"""Paper Figs. 10/11/12: latency / resource / power scaling vs clauses and
+classes across popcount implementations (6 classes for clause sweeps,
+100 clauses for class sweeps — the paper's settings)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hwmodel import HWConstants, TMShape, cost, \
+    popcount_only_power
+
+K = HWConstants()
+CLAUSES = [25, 50, 100, 200, 400]
+CLASSES = [2, 4, 6, 10, 20, 40]
+
+
+def _slope(xs, ys):
+    xs, ys = np.asarray(xs, float), np.asarray(ys, float)
+    return float(np.polyfit(xs, ys, 1)[0])
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    # Fig 10(a): latency vs clauses (6 classes)
+    for impl in ("generic", "fpt18", "timedomain"):
+        lat = [cost(impl, TMShape(6, m, 784, included_literals=30),
+                    K)["popcount_ns"] for m in CLAUSES]
+        rows.append((f"fig10a/popcount_latency_slope_ns_per_clause/{impl}",
+                     _slope(CLAUSES, lat),
+                     "paper: generic~log, fpt18<td linear"))
+    # Fig 10(b): latency vs classes (100 clauses)
+    for impl in ("generic", "timedomain"):
+        tot = [cost(impl, TMShape(c, 100, 784, included_literals=30),
+                    K)["latency_ns"] for c in CLASSES]
+        rows.append((f"fig10b/latency_slope_ns_per_class/{impl}",
+                     _slope(CLASSES, tot),
+                     "paper: adder linear, td ~ constant"))
+    # Fig 11: resources vs clauses / classes
+    for impl in ("generic", "fpt18", "async21", "timedomain"):
+        res_m = [cost(impl, TMShape(6, m, 784, included_literals=30),
+                      K)["resources"] for m in CLAUSES]
+        rows.append((f"fig11a/resource_slope_per_clause/{impl}",
+                     _slope(CLAUSES, res_m),
+                     "paper: all linear, td smallest increment"))
+        res_c = [cost(impl, TMShape(c, 100, 784, included_literals=30),
+                      K)["resources"] for c in CLASSES]
+        rows.append((f"fig11b/resource_slope_per_class/{impl}",
+                     _slope(CLASSES, res_c), ""))
+    # Fig 12: popcount power vs activity
+    sh = TMShape(6, 100, 784, included_literals=30)
+    for alpha in (0.1, 0.5):
+        for impl in ("generic", "fpt18", "timedomain"):
+            rows.append((f"fig12/popcount_power_a{alpha}/{impl}",
+                         popcount_only_power(impl, sh, K, alpha),
+                         "paper: adder cheaper @0.1, td cheapest @0.5"))
+    return rows

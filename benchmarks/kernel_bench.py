@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock here is CPU (the Pallas kernels execute compiled-for-TPU only on
+TPU; interpret mode is a correctness harness), so the numbers that matter
+are the *jnp reference* throughputs plus the kernels' MXU-formulation
+arithmetic intensities (derived), which is what the TPU roofline sees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.popcount import pack_bits
+from repro.kernels import ref
+from repro.kernels.clause_eval import make_vote_matrix
+
+from .common import time_us
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # bit-packed popcount: memory-bound; 32 votes/word
+    words = jnp.asarray(rng.integers(0, 2**32, (4096, 512), dtype=np.uint32))
+    f = jax.jit(ref.ref_popcount_words)
+    us = time_us(f, words)
+    gbps = words.size * 4 / (us * 1e-6) / 1e9
+    rows.append(("kernel/popcount_swar_4096x512words", us,
+                 f"{gbps:.1f} GB/s cpu; AI=0.25 flop/B -> HBM-bound on TPU"))
+
+    # fused TM clause+vote (MXU form): B=512, C=10, M=100, L=1568
+    lit = jnp.asarray(rng.integers(0, 2, (512, 1568), dtype=np.int8))
+    inc = jnp.asarray((rng.random((1000, 1568)) < 0.04).astype(np.int8))
+    vm = make_vote_matrix(10, 100)
+    g = jax.jit(ref.ref_clause_votes)
+    us = time_us(g, lit, inc, vm)
+    flops = 2 * 512 * 1000 * 1568 + 2 * 512 * 1000 * 10
+    rows.append(("kernel/tm_fused_votes_b512", us,
+                 f"{flops/(us*1e-6)/1e9:.1f} GFLOP/s cpu; fused: clause "
+                 f"matrix never hits HBM"))
+
+    # BNN ±1 GEMM 1024³
+    x = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
+    w = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
+    h = jax.jit(ref.ref_binary_matmul)
+    us = time_us(h, x, w)
+    rows.append(("kernel/binary_matmul_1024", us,
+                 f"{2*1024**3/(us*1e-6)/1e9:.1f} GFLOP/s cpu (int8 MXU on TPU)"))
+
+    # PDL race sim: B=1024, C=10, M=100
+    sel = jnp.asarray(rng.integers(0, 2, (1024, 10, 100), dtype=np.int8))
+    ed = jnp.asarray(rng.normal([[[384.5, 617.6]]], 5.0,
+                                (10, 100, 2)).astype(np.float32))
+    skew = jnp.zeros((10,), jnp.float32)
+    r = jax.jit(lambda s: ref.ref_pdl_race(s, ed, skew, 10.0))
+    us = time_us(r, sel)
+    rows.append(("kernel/pdl_race_b1024", us,
+                 f"{1024/(us*1e-6):.0f} races/s cpu"))
+    return rows

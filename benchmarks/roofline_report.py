@@ -1,0 +1,36 @@
+"""Roofline table from results/dryrun.json (single-pod cells).
+
+One row per (arch × shape): the three terms, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio — the §Roofline deliverable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run() -> list[tuple[str, float, str]]:
+    try:
+        with open(RESULTS) as f:
+            res = json.load(f)
+    except OSError:
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all")]
+    rows = []
+    for key in sorted(res):
+        v = res[key]
+        if v.get("mesh") != "single" or "roofline" not in v:
+            continue
+        r = v["roofline"]
+        name = f"{v['arch']}|{v['shape']}"
+        rows.append((f"roofline/{name}/fraction", r["roofline_fraction"],
+                     f"bottleneck={r['bottleneck']} "
+                     f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+                     f"n={r['collective_s']:.3f}s "
+                     f"useful={r['useful_flops_ratio']:.2f} "
+                     f"mem/dev={v['memory']['total_GiB']:.1f}GiB"))
+    return rows

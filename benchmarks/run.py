@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV (value is μs for kernel rows, a ratio /
+metric elsewhere — see each module).  ``python -m benchmarks.run [filter]``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig6_monotonicity, fig9_comparison, fig10_12_scaling,
+                   kernel_bench, roofline_report, table1_accuracy)
+    modules = [
+        ("fig6", fig6_monotonicity),
+        ("table1", table1_accuracy),
+        ("fig9", fig9_comparison),
+        ("fig10-12", fig10_12_scaling),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_report),
+    ]
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,value,derived")
+    for name, mod in modules:
+        if flt and flt not in name:
+            continue
+        t0 = time.time()
+        for row_name, value, derived in mod.run():
+            print(f"{row_name},{value:.6g},\"{derived}\"", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

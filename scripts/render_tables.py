@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/dryrun.json."""
+
+import json
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    with open("results/dryrun.json") as f:
+        res = json.load(f)
+
+    print("### Dry-run matrix (mem/device, compile status)\n")
+    print("| arch | shape | single-pod mem GiB | multi-pod mem GiB | collective kinds |")
+    print("|---|---|---|---|---|")
+    archs = sorted({v["arch"] for v in res.values()})
+    for a in archs:
+        for s in ORDER:
+            ks = f"{a}|{s}|single"
+            km = f"{a}|{s}|multi"
+            if ks not in res and km not in res:
+                continue
+            vs, vm = res.get(ks, {}), res.get(km, {})
+            def mem(v):
+                if not v:
+                    return "—"
+                if "error" in v:
+                    return "FAIL"
+                return f"{v['memory']['total_GiB']:.2f}"
+            kinds = ",".join(sorted(vs.get("hlo_collective_counts", {})))
+            print(f"| {a} | {s} | {mem(vs)} | {mem(vm)} | {kinds} |")
+
+    print("\n### Roofline (single-pod, per device, seconds/step)\n")
+    print("| arch | shape | compute | memory | collective | bottleneck |"
+          " roofline frac | useful FLOPs ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in ORDER:
+            v = res.get(f"{a}|{s}|single")
+            if not v or "roofline" not in v:
+                continue
+            r = v["roofline"]
+            print(f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f}"
+                  f" | {r['collective_s']:.4f} | {r['bottleneck']} |"
+                  f" {r['roofline_fraction']:.3f} |"
+                  f" {r['useful_flops_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""The paper's own architectures: Tsetlin Machines (Table I) + the §V BNN.
+
+These are not LM configs; they're registered so ``--arch tm-mnist-100``
+selects the paper's model in examples/benchmarks, with the time-domain
+popcount/argmax path as a first-class feature.
+"""
+
+from .base import ModelConfig, register
+
+for name, (classes, clauses, features, t, s) in {
+    "tm-iris-10": (3, 10, 12, 5, 1.5),
+    "tm-iris-50": (3, 50, 12, 7, 6.5),
+    "tm-mnist-50": (10, 50, 784, 5, 7.0),
+    "tm-mnist-100": (10, 100, 784, 5, 10.0),
+}.items():
+    register(ModelConfig(
+        name=name, family="tm",
+        n_layers=1, d_model=features,        # reuse fields: F
+        n_heads=classes,                     # C
+        d_ff=clauses,                        # M (clauses per class)
+        rope_theta=t,                        # T (vote clamp)
+        norm_eps=s,                          # s (specificity)
+        notes="paper Table I TM; fields repurposed (see docstring)",
+    ))
+
+register(ModelConfig(
+    name="bnn-mnist", family="tm",
+    n_layers=2, d_model=784, n_heads=10, d_ff=256,
+    notes="paper §V future-work BNN: 784→256→10 xnor-popcount MLP",
+))

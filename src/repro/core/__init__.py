@@ -1,0 +1,16 @@
+"""Paper core: Tsetlin Machine, time-domain popcount, FPGA cost model, BNN."""
+
+from .booleanize import QuantileBooleanizer, threshold_booleanize, to_literals
+from .bnn import BNNConfig, BNNParams, bnn_apply, bnn_loss, init_bnn
+from .hwmodel import HWConstants, IMPLS, TMShape, cost, paper_models
+from .popcount import (argmax_tournament, pack_bits, popcount_adder_tree,
+                       popcount_matmul, popcount_sum, popcount_swar,
+                       signed_vote_count, unpack_bits)
+from .time_domain import (PDLConfig, PDLDevice, RaceResult, async_latency,
+                          make_device, pdl_delays, race, spearman_rho,
+                          time_domain_argmax)
+from .tm import (TMConfig, TMState, class_sums, clause_outputs,
+                 clause_polarity, init_tm, predict)
+from .tm_train import evaluate, train_epoch, train_step
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,131 @@
+"""Binarized NN with xnor-popcount neurons (paper Fig. 1(b) + §V future work).
+
+- Hidden neuron: ``a = sign(popcount(xnor(x, w)) − n/2)`` — matches minus
+  mismatches against ±1 weights.  The time-domain variant (paper §V) gives
+  each neuron a PDL fed by the xnor bits and compares its arrival against a
+  shared *neutral* PDL with an equal number of ones and zeros; an arbiter
+  emits the sign.
+- Output layer: popcount per class + argmax — identical to the TM voting
+  head, so it reuses :mod:`repro.core.time_domain` for the race.
+- Training: straight-through estimator (STE) over real-valued master
+  weights; forward binarizes, backward passes clipped identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .popcount import argmax_tournament
+from .time_domain import PDLConfig, PDLDevice, pdl_delays, race
+
+__all__ = ["BNNConfig", "BNNParams", "init_bnn", "bnn_apply", "bnn_loss",
+           "binarize_ste", "xnor_popcount_layer", "time_domain_sign"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNConfig:
+    in_features: int
+    hidden: tuple[int, ...]
+    n_classes: int
+
+
+class BNNParams(NamedTuple):
+    weights: tuple[jax.Array, ...]   # real master weights, layer i: (d_in, d_out)
+
+
+def init_bnn(cfg: BNNConfig, key: jax.Array) -> BNNParams:
+    dims = (cfg.in_features, *cfg.hidden, cfg.n_classes)
+    ws = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                  * (1.0 / jnp.sqrt(dims[i])))
+    return BNNParams(weights=tuple(ws))
+
+
+@jax.custom_vjp
+def binarize_ste(w: jax.Array) -> jax.Array:
+    return jnp.where(w >= 0, 1.0, -1.0)
+
+
+def _bin_fwd(w):
+    return binarize_ste(w), w
+
+
+def _bin_bwd(w, g):
+    return (g * (jnp.abs(w) <= 1.0).astype(g.dtype),)  # clipped identity
+
+
+binarize_ste.defvjp(_bin_fwd, _bin_bwd)
+
+
+def xnor_popcount_layer(x_pm1: jax.Array, w_pm1: jax.Array) -> jax.Array:
+    """±1 activations × ±1 weights.  ``x @ w`` equals
+    ``2·popcount(xnor(bits)) − n`` — the matmul *is* the popcount (MXU form).
+    """
+    return x_pm1 @ w_pm1
+
+
+def bnn_apply(cfg: BNNConfig, params: BNNParams, x_pm1: jax.Array,
+              *, hard: bool = True) -> jax.Array:
+    """Forward pass → class scores (popcount-style integer-valued floats)."""
+    h = x_pm1
+    n = len(params.weights)
+    for i, w in enumerate(params.weights):
+        wb = binarize_ste(w)
+        h = xnor_popcount_layer(h, wb)
+        if i < n - 1:
+            h = binarize_ste(h) if hard else jnp.tanh(h)
+    return h  # (B, n_classes) vote scores
+
+
+def bnn_loss(cfg: BNNConfig, params: BNNParams, x_pm1: jax.Array,
+             y: jax.Array) -> jax.Array:
+    logits = bnn_apply(cfg, params, x_pm1, hard=True)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32) * 0.1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def time_domain_sign(pdl: PDLConfig, device: PDLDevice, match_bits: jax.Array,
+                     *, key: jax.Array | None = None) -> jax.Array:
+    """Paper §V sign activation: neuron PDL vs a neutral half-ones PDL.
+
+    match_bits: (B, N, n) xnor match bits per neuron → (B, N) ±1.
+    The neutral line has exactly n/2 ones; neuron fires (+1) iff its PDL
+    (more matches → faster) beats the neutral line.
+    """
+    b, nn_, n = match_bits.shape
+    neutral = jnp.tile(jnp.arange(n) % 2, (b, 1, 1)).astype(match_bits.dtype)
+    pairs = jnp.concatenate([match_bits, jnp.broadcast_to(neutral, (b, 1, n))],
+                            axis=1)  # (B, N+1, n)
+    pol = jnp.ones((n,), jnp.int32)   # all "positive": 1 → low-latency
+    delays = pdl_delays(pdl, device, pairs, pol, key=key)   # (B, N+1)
+    fire = delays[:, :nn_] < delays[:, nn_:nn_ + 1]
+    return jnp.where(fire, 1.0, -1.0)
+
+
+def bnn_predict_time_domain(cfg: BNNConfig, params: BNNParams,
+                            pdl: PDLConfig, devices: list[PDLDevice],
+                            x_pm1: jax.Array, *, key: jax.Array | None = None
+                            ) -> jax.Array:
+    """Full §V inference: hidden sign via neutral-PDL race, output via race."""
+    h = x_pm1
+    n = len(params.weights)
+    for i, w in enumerate(params.weights):
+        wb = binarize_ste(w)
+        if i < n - 1:
+            # match bits per neuron: (x·w +n)/2 expanded — use bit-level xnor
+            xb = (h > 0)[:, None, :]                     # (B, 1, d_in)
+            wbit = (wb > 0).T[None]                      # (1, d_out, d_in)
+            match = (xb == wbit).astype(jnp.int8)        # (B, d_out, d_in)
+            h = time_domain_sign(pdl, devices[i], match, key=key)
+        else:
+            scores = xnor_popcount_layer(h, wb)          # (B, C)
+            # output race: votes encoded as bits of the final matmul sign —
+            # use scores directly through the arbiter tournament
+            return argmax_tournament(scores.astype(jnp.int32))
+    raise AssertionError("unreachable")

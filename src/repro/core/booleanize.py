@@ -1,0 +1,56 @@
+"""Booleanization of raw features, following the paper's §IV-B.
+
+- Iris: each raw feature → quantile binning into ``n_bins`` one-hot Boolean
+  features (paper uses 3 bins → 12 Boolean features total).
+- MNIST: global grayscale threshold (paper uses 75).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantileBooleanizer", "threshold_booleanize", "to_literals"]
+
+
+@dataclasses.dataclass
+class QuantileBooleanizer:
+    """Quantile-bin each feature into a one-hot code of ``n_bins`` bits."""
+
+    n_bins: int = 3
+    edges_: np.ndarray | None = None  # (n_features, n_bins - 1)
+
+    def fit(self, x: np.ndarray) -> "QuantileBooleanizer":
+        qs = np.linspace(0.0, 1.0, self.n_bins + 1)[1:-1]
+        self.edges_ = np.quantile(np.asarray(x, np.float64), qs, axis=0).T
+        return self
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        assert self.edges_ is not None, "call fit() first"
+        x = np.asarray(x, np.float64)
+        # bin index per feature: count of edges below the value
+        idx = (x[:, :, None] > self.edges_[None, :, :]).sum(-1)  # (B, F)
+        onehot = np.eye(self.n_bins, dtype=np.int8)[idx]  # (B, F, n_bins)
+        return onehot.reshape(x.shape[0], -1)
+
+    def fit_transform(self, x: np.ndarray) -> np.ndarray:
+        return self.fit(x).transform(x)
+
+    @property
+    def n_boolean_features(self) -> int:
+        assert self.edges_ is not None
+        return self.edges_.shape[0] * self.n_bins
+
+
+def threshold_booleanize(x: jax.Array | np.ndarray, threshold: float = 75.0) -> np.ndarray:
+    """Paper's MNIST booleanization: ``x > threshold``."""
+    return (np.asarray(x) > threshold).astype(np.int8)
+
+
+def to_literals(x_bool: jax.Array) -> jax.Array:
+    """Boolean features → literal vector ``[x, ¬x]`` of length 2F (TM input)."""
+    x_bool = x_bool.astype(jnp.int8)
+    return jnp.concatenate([x_bool, 1 - x_bool], axis=-1)

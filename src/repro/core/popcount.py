@@ -1,0 +1,131 @@
+"""Popcount algorithm zoo.
+
+The paper's subject is the population count (Hamming weight) of Boolean
+vote vectors and the argmax across several such counts.  This module holds
+the *functional* (bit-exact) popcount algorithms used as oracles and as
+building blocks:
+
+- ``popcount_sum``        : trivial elementwise sum (semantic definition).
+- ``popcount_adder_tree`` : pairwise binary adder tree, mirroring the
+  hardware structure of the "generic" FPGA baseline (depth ``ceil(log2 n)``).
+- ``popcount_swar``       : bit-packed SWAR popcount over ``uint32`` words
+  (the classic Hacker's Delight reduction) — memory-optimal layout.
+- ``popcount_matmul``     : popcount as a dot product with a ones vector —
+  the MXU-friendly formulation used by the Pallas kernels.
+- ``signed_vote_count``   : the TM class-sum: +1 votes minus −1 votes, i.e.
+  a ±1 dot product (popcount of supporting bits minus opposing bits).
+
+All variants are bit-exact equal on the same input (property-tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "popcount_sum",
+    "popcount_adder_tree",
+    "popcount_swar",
+    "popcount_matmul",
+    "signed_vote_count",
+    "pack_bits",
+    "unpack_bits",
+    "argmax_tournament",
+]
+
+
+def popcount_sum(bits: jax.Array) -> jax.Array:
+    """Semantic popcount: sum of the last axis. ``bits``: {0,1} any int dtype."""
+    return jnp.sum(bits.astype(jnp.int32), axis=-1)
+
+
+def popcount_adder_tree(bits: jax.Array) -> jax.Array:
+    """Pairwise binary adder tree (structure of the hardware baseline).
+
+    Pads to the next power of two with zeros; depth is ``ceil(log2 n)`` —
+    the same depth that sets the critical path of the generic FPGA popcount.
+    """
+    x = bits.astype(jnp.int32)
+    n = x.shape[-1]
+    size = 1 if n == 0 else 1 << max(0, (n - 1)).bit_length()
+    if size != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, size - n)]
+        x = jnp.pad(x, pad)
+    while x.shape[-1] > 1:
+        x = x[..., 0::2] + x[..., 1::2]
+    return x[..., 0]
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a trailing axis of {0,1} into uint32 words (little-endian bit order).
+
+    Input ``(..., n)`` → output ``(..., ceil(n/32))``.
+    """
+    n = bits.shape[-1]
+    n_words = -(-n // 32)
+    if n_words * 32 != n:
+        pad = [(0, 0)] * (bits.ndim - 1) + [(0, n_words * 32 - n)]
+        bits = jnp.pad(bits, pad)
+    b = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], n_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: ``(..., n_words)`` → ``(..., n)`` int8."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * 32)[..., :n].astype(jnp.int8)
+
+
+def _swar_word(v: jax.Array) -> jax.Array:
+    """Hacker's Delight popcount of each uint32 lane."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def popcount_swar(words: jax.Array) -> jax.Array:
+    """Popcount of bit-packed uint32 words: ``(..., n_words)`` → ``(...)``."""
+    return jnp.sum(_swar_word(words.astype(jnp.uint32)), axis=-1)
+
+
+def popcount_matmul(bits: jax.Array) -> jax.Array:
+    """Popcount as a dot product with a ones vector (MXU formulation)."""
+    ones = jnp.ones((bits.shape[-1],), jnp.int32)
+    return jnp.einsum("...n,n->...", bits.astype(jnp.int32), ones)
+
+
+def signed_vote_count(bits: jax.Array, polarity: jax.Array) -> jax.Array:
+    """TM class sum: ``sum(bits * where(polarity>0, +1, -1))`` along last axis.
+
+    ``polarity``: (+1 supporting / −1 opposing) per voter, broadcastable to
+    ``bits``.  Equivalent to ``popcount(support) − popcount(oppose)`` and to
+    a ±1 dot product (the MXU kernel formulation).
+    """
+    sign = jnp.where(polarity > 0, 1, -1).astype(jnp.int32)
+    return jnp.einsum("...n,...n->...", bits.astype(jnp.int32), jnp.broadcast_to(sign, bits.shape))
+
+
+def argmax_tournament(scores: jax.Array) -> jax.Array:
+    """Tournament-tree argmax over the last axis (ties → lowest index).
+
+    Structure mirrors the paper's arbiter tree: ``ceil(log2 C)`` pairwise
+    comparison levels. Bit-exact equal to ``jnp.argmax``.
+    """
+    c = scores.shape[-1]
+    size = 1 if c == 0 else 1 << max(0, (c - 1)).bit_length()
+    neg_inf = jnp.iinfo(jnp.int32).min if jnp.issubdtype(scores.dtype, jnp.integer) else -jnp.inf
+    if size != c:
+        pad = [(0, 0)] * (scores.ndim - 1) + [(0, size - c)]
+        scores = jnp.pad(scores, pad, constant_values=neg_inf)
+    idx = jnp.broadcast_to(jnp.arange(size), scores.shape)
+    while scores.shape[-1] > 1:
+        a, b = scores[..., 0::2], scores[..., 1::2]
+        ia, ib = idx[..., 0::2], idx[..., 1::2]
+        take_a = a >= b  # ties resolve to the lower index, like jnp.argmax
+        scores = jnp.where(take_a, a, b)
+        idx = jnp.where(take_a, ia, ib)
+    return idx[..., 0]

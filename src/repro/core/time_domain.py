@@ -1,0 +1,155 @@
+"""Time-domain popcount & comparison: PDL race simulator (paper §III).
+
+Physics model (per paper Fig. 2 / §III-A):
+
+- A PDL for class ``c`` is a chain of ``M`` delay elements (one per clause).
+  Element ``j`` contributes ``d_low`` if its select bit routes through the
+  low-latency net, else ``d_high``.  For a *positive* clause, output 1
+  selects the low-latency net; for a *negative* clause the nets are swapped
+  (paper §III-A1), so the chain delay is an affine, strictly decreasing
+  function of the signed class sum:
+
+      delay(c) = M·d_high − Δ·(votes⁺(c) + (M/2 − votes⁻(c))),   Δ = d_high − d_low
+
+- Physical non-idealities: per-element process variation (fixed per
+  "device", N(0, σ_elem)), per-event jitter N(0, σ_noise), and a per-PDL
+  placement skew.  The paper's design flow (§III-B) exists to drive the
+  skew to ~0; we expose it so tests can show *why* (skew ⇒ broken
+  monotonicity ⇒ classification loss).
+
+- The arbiter is a tournament tree of SR latches: the earliest arrival
+  wins.  If two arrivals at any arbiter are closer than ``t_res``, the
+  latch may go metastable (paper §III-A3): we flag it and resolve to the
+  lower index (the paper's "predetermined guess").
+
+- Asynchronous latency (paper §IV-A): an inference completes when the
+  *winning* PDL transition reaches the last arbiter, so per-sample latency
+  is ``t_clause_bundle + min_c delay(c) + levels·t_arb + t_ctrl`` —
+  data-dependent, unlike a synchronous clock period set by the worst case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PDLConfig", "PDLDevice", "make_device", "pdl_delays", "race",
+           "RaceResult", "time_domain_argmax", "async_latency", "spearman_rho"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PDLConfig:
+    """Delay constants in picoseconds (defaults = paper Table I averages)."""
+
+    d_low: float = 384.5        # low-latency net delay / element (ps)
+    d_high: float = 617.6       # high-latency net delay / element (ps)
+    sigma_elem: float = 5.0     # per-element process variation (ps, device-fixed)
+    sigma_noise: float = 1.0    # per-event jitter (ps)
+    t_res: float = 10.0         # arbiter resolution window (ps)
+    t_arb: float = 150.0        # per-arbiter-level delay (ps)
+    t_ctrl: float = 500.0       # MOUSETRAP / controller overhead per token (ps)
+
+    @property
+    def delta(self) -> float:
+        return self.d_high - self.d_low
+
+
+class PDLDevice(NamedTuple):
+    """Per-"chip" fixed variation: element offsets (C, M, 2) low/high, skew (C,)."""
+
+    elem_offset: jax.Array   # (C, M, 2) ps  — [..., 0] low net, [..., 1] high net
+    skew: jax.Array          # (C,) ps       — per-PDL placement skew
+
+
+def make_device(cfg: PDLConfig, n_classes: int, n_clauses: int,
+                key: jax.Array, *, skew_ps: float = 0.0) -> PDLDevice:
+    """Sample one device's process variation; ``skew_ps`` models a *bad*
+    (non-symmetric) placement — the paper's design flow achieves ≈0."""
+    k1, k2 = jax.random.split(key)
+    elem = cfg.sigma_elem * jax.random.normal(k1, (n_classes, n_clauses, 2))
+    skew = skew_ps * jax.random.normal(k2, (n_classes,))
+    return PDLDevice(elem_offset=elem, skew=skew)
+
+
+def pdl_delays(cfg: PDLConfig, device: PDLDevice, clause_bits: jax.Array,
+               polarity: jax.Array, *, key: jax.Array | None = None) -> jax.Array:
+    """Chain propagation delay per class.
+
+    clause_bits: (B, C, M) {0,1}; polarity: (M,) ±1  →  (B, C) float ps.
+
+    Select low net iff (bit==1 for positive clause) or (bit==0 for negative
+    clause) — paper §III-A1.
+    """
+    bits = clause_bits.astype(jnp.int32)
+    pos = (polarity > 0).astype(jnp.int32)[None, None, :]
+    low_sel = jnp.where(pos == 1, bits, 1 - bits)               # (B, C, M)
+    d_low = cfg.d_low + device.elem_offset[None, :, :, 0]
+    d_high = cfg.d_high + device.elem_offset[None, :, :, 1]
+    per_elem = jnp.where(low_sel == 1, d_low, d_high)           # (B, C, M)
+    total = per_elem.sum(-1) + device.skew[None, :]
+    if key is not None and cfg.sigma_noise > 0:
+        total = total + cfg.sigma_noise * jax.random.normal(key, total.shape)
+    return total
+
+
+class RaceResult(NamedTuple):
+    winner: jax.Array        # (B,) int32 — class whose transition arrived first
+    latency: jax.Array       # (B,) float ps — winning arrival time
+    metastable: jax.Array    # (B,) bool — any arbiter saw |Δt| < t_res
+
+
+def race(cfg: PDLConfig, delays: jax.Array) -> RaceResult:
+    """Tournament arbiter tree over per-class arrival times (B, C)."""
+    b, c = delays.shape
+    size = 1 << max(0, (c - 1)).bit_length() if c > 1 else 1
+    inf = jnp.asarray(jnp.inf, delays.dtype)
+    if size != c:
+        delays = jnp.pad(delays, ((0, 0), (0, size - c)), constant_values=inf)
+    idx = jnp.broadcast_to(jnp.arange(size), delays.shape)
+    meta = jnp.zeros((b,), bool)
+    while delays.shape[-1] > 1:
+        a, bb = delays[..., 0::2], delays[..., 1::2]
+        ia, ib = idx[..., 0::2], idx[..., 1::2]
+        close = jnp.abs(a - bb) < cfg.t_res
+        meta = meta | jnp.any(close & jnp.isfinite(a) & jnp.isfinite(bb), axis=-1)
+        take_a = a <= bb                      # tie → lower index (predetermined)
+        delays = jnp.where(take_a, a, bb)
+        idx = jnp.where(take_a, ia, ib)
+    return RaceResult(winner=idx[..., 0], latency=delays[..., 0],
+                      metastable=meta)
+
+
+def time_domain_argmax(cfg: PDLConfig, device: PDLDevice, clause_bits: jax.Array,
+                       polarity: jax.Array, *, key: jax.Array | None = None
+                       ) -> RaceResult:
+    """Full paper §III pipeline: PDL conversion + arbiter race."""
+    return race(cfg, pdl_delays(cfg, device, clause_bits, polarity, key=key))
+
+
+def async_latency(cfg: PDLConfig, result: RaceResult, n_classes: int,
+                  t_clause_bundle_ps: float) -> jax.Array:
+    """Per-inference latency of the asynchronous TM (paper §IV-A)."""
+    levels = max(1, int(np.ceil(np.log2(max(2, n_classes)))))
+    return t_clause_bundle_ps + result.latency + levels * cfg.t_arb + cfg.t_ctrl
+
+
+def spearman_rho(x: np.ndarray, y: np.ndarray) -> float:
+    """Spearman rank correlation (paper Fig. 6 metric), no scipy dependency."""
+    def rank(v):
+        order = np.argsort(v, kind="stable")
+        r = np.empty_like(order, dtype=np.float64)
+        r[order] = np.arange(len(v))
+        # average ties
+        vv = np.asarray(v)
+        for val in np.unique(vv):
+            m = vv == val
+            r[m] = r[m].mean()
+        return r
+    rx, ry = rank(np.asarray(x)), rank(np.asarray(y))
+    rx -= rx.mean(); ry -= ry.mean()
+    denom = np.sqrt((rx ** 2).sum() * (ry ** 2).sum())
+    return float((rx * ry).sum() / denom) if denom else 0.0

@@ -1,0 +1,98 @@
+"""Tsetlin Machine model + inference (paper Fig. 1(a)).
+
+A TM with ``C`` classes, ``M`` clauses per class over ``F`` Boolean features:
+
+- literals: ``l = [x, ¬x]`` (length ``2F``);
+- Tsetlin-automaton state ``ta``: int32 ``(C, M, 2F)`` in ``[1, 2N]``;
+  literal *included* in a clause iff ``ta > N``;
+- clause output: conjunction of included literals (empty clause behaviour
+  selectable: 1 during inference, 1 during training — standard vanilla TM);
+- class sum ("votes"): even-indexed clauses vote +1, odd-indexed −1;
+- prediction: argmax over class sums.
+
+Inference here is the *functional oracle*; ``repro.kernels.clause_eval``
+provides the fused MXU formulation and ``repro.core.time_domain`` the PDL
+race that replaces popcount+argmax in the paper's hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .popcount import argmax_tournament, signed_vote_count
+
+__all__ = ["TMConfig", "TMState", "init_tm", "clause_outputs", "class_sums", "predict",
+           "clause_polarity"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    n_classes: int
+    n_clauses: int          # clauses per class (half vote +, half vote −)
+    n_features: int         # Boolean features (literals = 2×)
+    n_states: int = 128     # N: per-action states; ta in [1, 2N]
+    T: int = 15             # vote clamp threshold
+    s: float = 3.9          # specificity
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+
+class TMState(NamedTuple):
+    ta: jax.Array  # (C, M, 2F) int32 in [1, 2N]
+
+
+def clause_polarity(n_clauses: int) -> jax.Array:
+    """+1 for even clause index (supporting), −1 for odd (opposing)."""
+    return jnp.where(jnp.arange(n_clauses) % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def init_tm(cfg: TMConfig, key: jax.Array) -> TMState:
+    """Initialize each TA uniformly at the include/exclude boundary {N, N+1}."""
+    ta = jax.random.randint(
+        key, (cfg.n_classes, cfg.n_clauses, cfg.n_literals),
+        cfg.n_states, cfg.n_states + 2, dtype=jnp.int32)
+    return TMState(ta=ta)
+
+
+def include_mask(cfg: TMConfig, state: TMState) -> jax.Array:
+    """(C, M, 2F) int8: literal included in clause."""
+    return (state.ta > cfg.n_states).astype(jnp.int8)
+
+
+def clause_outputs(cfg: TMConfig, state: TMState, literals: jax.Array,
+                   *, empty_clause_output: int = 1) -> jax.Array:
+    """Evaluate all clauses on a batch of literal vectors.
+
+    literals: (B, 2F) {0,1}  →  (B, C, M) {0,1}.
+
+    A clause fires iff no *included* literal is 0.  Formulated as a
+    violation count so the MXU kernel (int8 matmul) matches bit-exactly:
+    ``violations[b,c,m] = Σ_f include[c,m,f] · (1 − l[b,f])``;
+    clause = 1 iff violations == 0 (and, optionally, clause non-empty).
+    """
+    inc = include_mask(cfg, state)                       # (C, M, 2F)
+    viol = jnp.einsum("bf,cmf->bcm", (1 - literals).astype(jnp.int32),
+                      inc.astype(jnp.int32))
+    out = (viol == 0).astype(jnp.int8)
+    if not empty_clause_output:
+        nonempty = (inc.sum(-1) > 0).astype(jnp.int8)    # (C, M)
+        out = out * nonempty[None]
+    return out
+
+
+def class_sums(cfg: TMConfig, clauses: jax.Array) -> jax.Array:
+    """(B, C, M) clause outputs → (B, C) int32 signed vote counts."""
+    pol = clause_polarity(cfg.n_clauses)
+    return signed_vote_count(clauses, pol[None, None, :])
+
+
+def predict(cfg: TMConfig, state: TMState, literals: jax.Array) -> jax.Array:
+    """(B, 2F) literals → (B,) predicted class (tournament argmax)."""
+    sums = class_sums(cfg, clause_outputs(cfg, state, literals))
+    return argmax_tournament(sums)

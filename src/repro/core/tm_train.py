@@ -1,0 +1,143 @@
+"""Vanilla Tsetlin Machine training (Granmo 2018), vectorized in JAX.
+
+Per sample with label ``y``:
+- target class ``y`` receives feedback with per-clause probability
+  ``(T − clip(v_y)) / 2T``; a uniformly sampled negative class ``ŷ`` with
+  probability ``(T + clip(v_ŷ)) / 2T``.
+- On the target class, positive-polarity clauses receive Type I feedback and
+  negative-polarity clauses Type II; on the negative class the roles swap.
+
+Type I (combats false negatives; drives clauses toward matching patterns):
+  clause=1, literal=1 : include-reinforce (+1) w.p. (s−1)/s  (1.0 if boost_tpf)
+  clause=1, literal=0 : exclude-reinforce (−1) w.p. 1/s
+  clause=0            : exclude-reinforce (−1) w.p. 1/s (all literals)
+Type II (combats false positives; adds discriminating literals):
+  clause=1, literal=0 : +1 w.p. 1  (only on currently excluded literals)
+
+States clip to [1, 2N].  The batch update sums per-sample deltas before
+clipping — the standard data-parallel TM approximation (Abeyrathna et al.,
+"massively parallel" TM), which preserves convergence in practice and makes
+the update a single ``einsum``-shaped reduction (DP-shardable over batch).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .tm import TMConfig, TMState, class_sums, clause_outputs, clause_polarity
+
+__all__ = ["train_step", "train_epoch", "evaluate"]
+
+
+def _type_i_delta(key: jax.Array, clause: jax.Array, literals: jax.Array,
+                  s: float, boost_tpf: bool) -> jax.Array:
+    """Type I feedback delta for one class block.
+
+    clause: (B, M) {0,1}; literals: (B, 2F) {0,1} → delta (B, M, 2F) int32.
+    """
+    b, m = clause.shape
+    f2 = literals.shape[-1]
+    u = jax.random.uniform(key, (b, m, f2))
+    lit = literals[:, None, :]                      # (B, 1, 2F)
+    cl = clause[:, :, None]                         # (B, M, 1)
+    p_inc = 1.0 if boost_tpf else (s - 1.0) / s
+    inc = (cl == 1) & (lit == 1) & (u < p_inc)      # reinforce include
+    dec_match = (cl == 1) & (lit == 0) & (u < 1.0 / s)
+    dec_nomatch = (cl == 0) & (u < 1.0 / s)
+    return inc.astype(jnp.int32) - (dec_match | dec_nomatch).astype(jnp.int32)
+
+
+def _type_ii_delta(clause: jax.Array, literals: jax.Array,
+                   included: jax.Array) -> jax.Array:
+    """Type II feedback: +1 on excluded literals that are 0 in firing clauses."""
+    lit = literals[:, None, :]                      # (B, 1, 2F)
+    cl = clause[:, :, None]                         # (B, M, 1)
+    inc = included[None]                            # (1, M, 2F)
+    return ((cl == 1) & (lit == 0) & (inc == 0)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "boost_tpf"))
+def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
+               x_literals: jax.Array, y: jax.Array,
+               boost_tpf: bool = True) -> TMState:
+    """One batched TM update. x_literals: (B, 2F) {0,1}; y: (B,) int32."""
+    b = x_literals.shape[0]
+    c, m = cfg.n_classes, cfg.n_clauses
+    k_neg, k_fb, k_i = jax.random.split(key, 3)
+
+    clauses = clause_outputs(cfg, state, x_literals)          # (B, C, M)
+    votes = class_sums(cfg, clauses)                          # (B, C)
+    v = jnp.clip(votes, -cfg.T, cfg.T).astype(jnp.float32)
+
+    # sample a negative class != y per sample
+    offs = jax.random.randint(k_neg, (b,), 1, c)
+    y_neg = (y + offs) % c
+
+    # per-(sample, class) feedback activation probability
+    p_target = (cfg.T - v[jnp.arange(b), y]) / (2.0 * cfg.T)          # (B,)
+    p_neg = (cfg.T + v[jnp.arange(b), y_neg]) / (2.0 * cfg.T)         # (B,)
+    u = jax.random.uniform(k_fb, (b, 2, m))
+    fb_t = u[:, 0] < p_target[:, None]                                 # (B, M)
+    fb_n = u[:, 1] < p_neg[:, None]                                    # (B, M)
+
+    pol = clause_polarity(m)                                           # (M,)
+    pos = (pol > 0)[None, :]                                           # (1, M)
+
+    cl_t = clauses[jnp.arange(b), y]                                   # (B, M)
+    cl_n = clauses[jnp.arange(b), y_neg]                               # (B, M)
+    inc_t = (state.ta > cfg.n_states)[y].astype(jnp.int8)              # (B, M, 2F)
+    inc_n = (state.ta > cfg.n_states)[y_neg].astype(jnp.int8)
+
+    k_i1, k_i2 = jax.random.split(k_i)
+    d1_t = _type_i_delta(k_i1, cl_t, x_literals, cfg.s, boost_tpf)     # (B, M, 2F)
+    d1_n = _type_i_delta(k_i2, cl_n, x_literals, cfg.s, boost_tpf)
+
+    # Type II needs the per-sample include mask of the addressed class.
+    d2_t = ((cl_t[:, :, None] == 1) & (x_literals[:, None, :] == 0)
+            & (inc_t == 0)).astype(jnp.int32)
+    d2_n = ((cl_n[:, :, None] == 1) & (x_literals[:, None, :] == 0)
+            & (inc_n == 0)).astype(jnp.int32)
+
+    # target class: Type I on positive clauses, Type II on negative clauses
+    delta_t = jnp.where((fb_t & pos)[:, :, None], d1_t, 0) \
+        + jnp.where((fb_t & ~pos)[:, :, None], d2_t, 0)
+    # negative class: Type II on positive clauses, Type I on negative clauses
+    delta_n = jnp.where((fb_n & pos)[:, :, None], d2_n, 0) \
+        + jnp.where((fb_n & ~pos)[:, :, None], d1_n, 0)
+
+    # scatter-add per-class sums of deltas over the batch
+    onehot_t = jax.nn.one_hot(y, c, dtype=jnp.int32)                   # (B, C)
+    onehot_n = jax.nn.one_hot(y_neg, c, dtype=jnp.int32)
+    upd = jnp.einsum("bc,bmf->cmf", onehot_t, delta_t) \
+        + jnp.einsum("bc,bmf->cmf", onehot_n, delta_n)
+
+    ta = jnp.clip(state.ta + upd, 1, 2 * cfg.n_states)
+    return TMState(ta=ta)
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch_size"))
+def train_epoch(cfg: TMConfig, state: TMState, key: jax.Array,
+                x_literals: jax.Array, y: jax.Array,
+                batch_size: int = 32) -> TMState:
+    """Scan over minibatches (drops the ragged tail)."""
+    n = (x_literals.shape[0] // batch_size) * batch_size
+    xb = x_literals[:n].reshape(-1, batch_size, x_literals.shape[-1])
+    yb = y[:n].reshape(-1, batch_size)
+    keys = jax.random.split(key, xb.shape[0])
+
+    def body(st, inp):
+        k, xi, yi = inp
+        return train_step(cfg, st, k, xi, yi), None
+
+    state, _ = jax.lax.scan(body, state, (keys, xb, yb))
+    return state
+
+
+def evaluate(cfg: TMConfig, state: TMState, x_literals: jax.Array,
+             y: jax.Array) -> float:
+    from .tm import predict
+    pred = predict(cfg, state, x_literals)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))

@@ -1,0 +1,4 @@
+from .datasets import iris_like, mnist_like, lm_token_stream
+from .pipeline import ShardedLoader
+
+__all__ = ["iris_like", "mnist_like", "lm_token_stream", "ShardedLoader"]

@@ -1,0 +1,99 @@
+"""Logical-axis sharding rules → concrete NamedShardings.
+
+One rules dict drives parameter, activation, and cache sharding for every
+architecture (DESIGN.md §4).  Arch-specific deviations (e.g. mamba2-130m
+replicating the model axis) are declared in the config's
+``rules_overrides`` — models never hard-code mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["make_rules", "named_sharding", "constrainer", "batch_axes"]
+
+
+def make_rules(mesh: Mesh | None, overrides: tuple[tuple[str, Any], ...] = ()
+               ) -> dict[str, Any]:
+    """Default logical→mesh mapping for a ('pod'?, 'data', 'model') mesh."""
+    axes = mesh.axis_names if mesh is not None else ()
+    dp = tuple(a for a in ("pod", "data") if a in axes) or None
+    if dp and len(dp) == 1:
+        dp = dp[0]
+    model = "model" if "model" in axes else None
+    data = "data" if "data" in axes else None
+    rules: dict[str, Any] = {
+        "batch": dp,
+        "embed": data,        # FSDP
+        "vocab": model,
+        "heads": model,
+        "kv_heads": model,
+        "mlp": model,
+        "experts": model,
+        "expert_mlp": None,   # expert FF dim: EP only (no nested TP)
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "layers": None,
+        "seq": data,          # long-context KV cache seq sharding
+        "act_seq": None,      # Megatron-SP residual-stream seq sharding
+        "conv": None,
+        # flattened token-dispatch dim (MoE): sharded over every axis
+        "tokens": tuple(a for a in ("pod", "data", "model") if a in axes)
+        or None,
+    }
+    rules.update(dict(overrides))
+    return rules
+
+
+def batch_axes(rules: dict, batch: int, mesh: Mesh | None):
+    """Batch-dim sharding if the global batch divides the dp extent."""
+    dp = rules.get("batch")
+    if mesh is None or dp is None:
+        return None
+    names = (dp,) if isinstance(dp, str) else tuple(dp)
+    extent = 1
+    for n in names:
+        extent *= mesh.shape[n]
+    return dp if batch % extent == 0 else None
+
+
+def named_sharding(mesh: Mesh | None, spec: P):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def constrainer(mesh: Mesh | None, rules: dict):
+    """Return ``c(x, *logical_axes)`` → with_sharding_constraint or no-op.
+
+    A logical axis may be a str (looked up in rules), None, or a raw tuple
+    of mesh axis names.
+    """
+    if mesh is None:
+        return lambda x, *axes: x
+
+    def c(x, *axes):
+        resolved = []
+        for i, a in enumerate(axes):
+            if a is None:
+                r = None
+            elif isinstance(a, str):
+                r = rules.get(a)
+            else:
+                r = a
+            if r is not None:
+                names = (r,) if isinstance(r, str) else tuple(r)
+                extent = 1
+                for nme in names:
+                    extent *= mesh.shape[nme]
+                if i >= x.ndim or x.shape[i] % extent:
+                    r = None        # non-dividing dims stay unconstrained
+            resolved.append(r)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*resolved)))
+
+    return c

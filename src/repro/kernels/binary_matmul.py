@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: ±1 GEMM (BNN xnor-popcount accumulation).
+
+A BNN neuron computes ``2·popcount(xnor(x, w)) − K``; with the ±1 encoding
+that is exactly an integer matmul, which is how the operation should hit
+the MXU (the paper's "popcount is the accumulation function" observation,
+re-tiled for a systolic array instead of an adder tree / PDL).
+
+Standard 3-axis matmul grid ``(M/bm, N/bn, K/bk)`` with K-accumulation in
+the output block; f32 accumulate is exact for ±1 operands (|acc| ≤ K < 2²⁴).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["binary_matmul_pallas"]
+
+
+def _binary_matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def binary_matmul_pallas(x_pm1: jax.Array, w_pm1: jax.Array, *,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128, interpret: bool = True
+                         ) -> jax.Array:
+    """(M, K) int8 ±1 × (K, N) int8 ±1 → (M, N) int32 (zero-padded, exact)."""
+    m, k = x_pm1.shape
+    k2, n = w_pm1.shape
+    assert k == k2, (k, k2)
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    kp = -(-k // block_k) * block_k
+    x = jnp.pad(x_pm1, ((0, mp - m), (0, kp - k)))
+    w = jnp.pad(w_pm1, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _binary_matmul_kernel,
+        grid=(mp // block_m, np_ // block_n, kp // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out[:m, :n].astype(jnp.int32)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused TM clause-eval + class-vote (MXU formulation).
+
+The paper fuses popcount and argmax into one electrical race so the vote
+counts never exist as data.  The TPU-native analogue: clause evaluation,
+popcount and the signed class-vote reduction fuse into a single kernel of
+two chained MXU matmuls, so the (B, C·M) clause matrix never round-trips
+through HBM:
+
+    viol[b,cm]  = Σ_l (1 − lit[b,l]) · inc[cm,l]        (MXU, int-exact)
+    clause      = (viol == 0)                           (VPU epilogue)
+    votes[b,c] += clause @ vote_matrix[cm,c]            (MXU)
+
+Tiling: grid ``(B/bb, CM/bc)``; literals block (bb, L), include block
+(bc, L), vote-matrix block (bc, C).  L and C stay resident (≤ a few K for
+TMs); the CM axis is the reduction axis of the *second* matmul, so the
+output (bb, C) block accumulates across grid axis 1.
+
+MXU alignment: bb, bc multiples of 128 (f32 matmul tiles); epilogue
+comparison runs on the VPU.  Inputs are {0,1} so f32 accumulation is exact
+(< 2^24 ≫ any L).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["clause_votes_pallas", "make_vote_matrix"]
+
+
+def make_vote_matrix(n_classes: int, n_clauses: int) -> jax.Array:
+    """(C·M, C) int8: ``polarity(m) · onehot(c)`` — even clause index +1."""
+    pol = jnp.where(jnp.arange(n_clauses) % 2 == 0, 1, -1).astype(jnp.int8)
+    eye = jnp.eye(n_classes, dtype=jnp.int8)
+    vm = eye[:, None, :] * pol[None, :, None]          # (C, M, C)
+    return vm.reshape(n_classes * n_clauses, n_classes)
+
+
+def _clause_votes_kernel(lit_ref, inc_ref, vm_ref, o_ref):
+    j = pl.program_id(1)
+
+    not_lit = 1.0 - lit_ref[...].astype(jnp.float32)             # (bb, L)
+    inc = inc_ref[...].astype(jnp.float32)                       # (bc, L)
+    viol = jax.lax.dot_general(
+        not_lit, inc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # (bb, bc)
+    clause = (viol == 0.0).astype(jnp.float32)
+    votes = jax.lax.dot_general(
+        clause, vm_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # (bb, C)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += votes
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_cm", "interpret"))
+def clause_votes_pallas(literals: jax.Array, include: jax.Array,
+                        vote_matrix: jax.Array, *, block_b: int = 128,
+                        block_cm: int = 128, interpret: bool = True
+                        ) -> jax.Array:
+    """Fused TM inference.
+
+    literals (B, L) {0,1} int8; include (CM, L) {0,1} int8;
+    vote_matrix (CM, C) int8 → votes (B, C) int32.
+
+    Padding is exact: padded *include* rows are all-ones clauses that always
+    "fire", but their vote_matrix rows are zero so they contribute nothing;
+    padded literal columns pair zero-include with anything (no violation).
+    """
+    b, l = literals.shape
+    cm, _ = include.shape
+    c = vote_matrix.shape[1]
+    bp = -(-b // block_b) * block_b
+    cmp_ = -(-cm // block_cm) * block_cm
+    lp = -(-l // 128) * 128
+    lit = jnp.pad(literals, ((0, bp - b), (0, lp - l)), constant_values=1)
+    inc = jnp.pad(include, ((0, cmp_ - cm), (0, lp - l)))
+    vm = jnp.pad(vote_matrix, ((0, cmp_ - cm), (0, -(-c // 128) * 128 - c)))
+    cp = vm.shape[1]
+
+    out = pl.pallas_call(
+        _clause_votes_kernel,
+        grid=(bp // block_b, cmp_ // block_cm),
+        in_specs=[
+            pl.BlockSpec((block_b, lp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_cm, lp), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_cm, cp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, cp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, cp), jnp.float32),
+        interpret=interpret,
+    )(lit, inc, vm)
+    return out[:b, :c].astype(jnp.int32)

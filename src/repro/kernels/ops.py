@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` auto-selects: compiled on TPU, interpreter elsewhere (this
+container is CPU-only; interpret=True runs the kernel body in Python for
+bit-exact validation against ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .binary_matmul import binary_matmul_pallas
+from .clause_eval import clause_votes_pallas, make_vote_matrix
+from .pdl_race import pdl_race_pallas
+from .popcount import popcount_words_pallas
+
+__all__ = ["popcount_words", "tm_fused_votes", "tm_fused_predict",
+           "xnor_popcount_matmul", "pdl_race_sim", "make_vote_matrix",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def popcount_words(words: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    """(R, W) uint32 → (R,) int32 Hamming weights."""
+    if not use_kernel:
+        return ref.ref_popcount_words(words)
+    return popcount_words_pallas(words, interpret=not on_tpu())
+
+
+def tm_fused_votes(literals: jax.Array, include: jax.Array,
+                   vote_matrix: jax.Array, *, use_kernel: bool = True
+                   ) -> jax.Array:
+    """Fused TM inference → (B, C) int32 class votes (never materializes
+    the (B, C·M) clause matrix in HBM)."""
+    if not use_kernel:
+        return ref.ref_clause_votes(literals, include, vote_matrix)
+    return clause_votes_pallas(literals, include, vote_matrix,
+                               interpret=not on_tpu())
+
+
+def tm_fused_predict(literals: jax.Array, include: jax.Array,
+                     vote_matrix: jax.Array, **kw) -> jax.Array:
+    """Votes + tournament argmax → (B,) predicted class."""
+    from repro.core.popcount import argmax_tournament
+    return argmax_tournament(tm_fused_votes(literals, include, vote_matrix,
+                                            **kw))
+
+
+def xnor_popcount_matmul(x_pm1: jax.Array, w_pm1: jax.Array, *,
+                         use_kernel: bool = True) -> jax.Array:
+    """BNN ±1 GEMM → int32 (== 2·popcount(xnor) − K on bit encodings)."""
+    if not use_kernel:
+        return ref.ref_binary_matmul(x_pm1, w_pm1)
+    return binary_matmul_pallas(x_pm1, w_pm1, interpret=not on_tpu())
+
+
+def pdl_race_sim(low_sel: jax.Array, elem_delays: jax.Array, skew: jax.Array,
+                 t_res: float, *, use_kernel: bool = True):
+    """Batched PDL race → (winner, latency, metastable)."""
+    if not use_kernel:
+        return ref.ref_pdl_race(low_sel, elem_delays, skew, t_res)
+    return pdl_race_pallas(low_sel, elem_delays, skew, t_res,
+                           interpret=not on_tpu())

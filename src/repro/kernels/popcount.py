@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: bit-packed popcount (VPU bit-twiddling).
+
+Counts set bits of uint32-packed rows: ``(R, W) → (R,)``.  This is the
+memory-bound regime of the paper's operation — 32 vote bits per word read
+from HBM; on TPU the SWAR reduction runs on the VPU at (8,128) lane tiling.
+
+Tiling: grid ``(R/br, W/bw)``; each step loads a ``(br, bw)`` uint32 block
+into VMEM, popcounts lanes, and accumulates a partial row-sum into the
+``(br, 1)``-padded output block (revisited across the W axis — standard
+reduction grid, output block index is independent of the reduced axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["popcount_words_pallas", "DEFAULT_BLOCK_R", "DEFAULT_BLOCK_W"]
+
+DEFAULT_BLOCK_R = 8      # sublane-aligned row tile
+DEFAULT_BLOCK_W = 128    # lane-aligned word tile
+
+
+def _popcount_kernel(w_ref, o_ref):
+    """One (br, bw) block: SWAR popcount + row reduction, accumulated."""
+    k = pl.program_id(1)
+
+    v = w_ref[...].astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    partial = per_word.sum(axis=1, keepdims=True)           # (br, 1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_w", "interpret"))
+def popcount_words_pallas(words: jax.Array, *, block_r: int = DEFAULT_BLOCK_R,
+                          block_w: int = DEFAULT_BLOCK_W,
+                          interpret: bool = True) -> jax.Array:
+    """(R, W) uint32 → (R,) int32. Pads R, W to block multiples (zero words
+    contribute zero bits, so padding is exact)."""
+    r, w = words.shape
+    rp = -(-r // block_r) * block_r
+    wp = -(-w // block_w) * block_w
+    if (rp, wp) != (r, w):
+        words = jnp.pad(words, ((0, rp - r), (0, wp - w)))
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=(rp // block_r, wp // block_w),
+        in_specs=[pl.BlockSpec((block_r, block_w), lambda i, k: (i, k))],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out[:r, 0]

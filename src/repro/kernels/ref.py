@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact references).
+
+Each ``ref_*`` mirrors the public semantics of the corresponding wrapper in
+``repro.kernels.ops``; kernel tests sweep shapes/dtypes and assert
+``assert_allclose(kernel, ref)`` (exact for the integer kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_popcount_words", "ref_clause_votes", "ref_binary_matmul",
+           "ref_pdl_race"]
+
+
+def ref_popcount_words(words: jax.Array) -> jax.Array:
+    """(R, W) uint32 bit-packed rows → (R,) int32 Hamming weights."""
+    v = words.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    return per_word.sum(-1)
+
+
+def ref_clause_votes(literals: jax.Array, include: jax.Array,
+                     vote_matrix: jax.Array) -> jax.Array:
+    """Fused TM inference oracle.
+
+    literals:    (B, L)  {0,1} int8 — [x, ¬x]
+    include:     (CM, L) {0,1} int8 — flattened (class·clauses) include masks
+    vote_matrix: (CM, C) int8 — ``polarity[cm] · onehot(class(cm))``
+    → votes (B, C) int32.
+    """
+    viol = (1 - literals.astype(jnp.int32)) @ include.astype(jnp.int32).T
+    clause = (viol == 0).astype(jnp.int32)                  # (B, CM)
+    return clause @ vote_matrix.astype(jnp.int32)           # (B, C)
+
+
+def ref_binary_matmul(x_pm1: jax.Array, w_pm1: jax.Array) -> jax.Array:
+    """±1 GEMM oracle: (M, K) int8 × (K, N) int8 → (M, N) int32.
+
+    Equals ``2·popcount(xnor(x_bits, w_bits)) − K`` for the bit encodings —
+    the BNN xnor-popcount accumulation (paper Fig. 1(b)).
+    """
+    return x_pm1.astype(jnp.int32) @ w_pm1.astype(jnp.int32)
+
+
+def ref_pdl_race(low_sel: jax.Array, elem_delays: jax.Array,
+                 skew: jax.Array, t_res: float
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PDL race oracle.
+
+    low_sel:     (B, C, M) {0,1} int8 — element selects the low-latency net
+    elem_delays: (C, M, 2) f32 ps — [...,0] low-net, [...,1] high-net delay
+    skew:        (C,) f32 ps
+    → (winner (B,) int32, latency (B,) f32, metastable (B,) bool).
+
+    Winner = argmin of arrival (ties → lower index); metastable iff the
+    gap between the two earliest arrivals is < t_res.
+    """
+    low = elem_delays[None, :, :, 0]
+    high = elem_delays[None, :, :, 1]
+    per = jnp.where(low_sel == 1, low, high)                  # (B, C, M)
+    delays = per.sum(-1) + skew[None, :]                      # (B, C)
+    winner = jnp.argmin(delays, axis=-1).astype(jnp.int32)
+    latency = jnp.min(delays, axis=-1)
+    # gap between two smallest arrivals
+    top2 = -jax.lax.top_k(-delays, 2)[0]
+    meta = (top2[:, 1] - top2[:, 0]) < t_res
+    return winner, latency, meta

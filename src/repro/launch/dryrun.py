@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+- the sharding config is coherent (GSPMD partitions every op);
+- the step fits per-device memory (``compiled.memory_analysis()``);
+- the roofline terms (``cost_analysis`` FLOPs/bytes + HLO collective bytes).
+
+Because XLA cost analysis counts while-loop bodies once, FLOP/byte/
+collective numbers come from a two-point depth extrapolation with scans
+unrolled (1 and 2 layer-units → per-unit cost → true depth); memory and
+compile-validity come from the full-depth scanned compile.  See
+EXPERIMENTS.md §Roofline-method.
+
+Usage:
+    python -m repro.launch.dryrun --all                  # every cell, both meshes
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single --no-roofline
+Results accumulate in results/dryrun.json (incremental; safe to re-run).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import unroll_scans
+from repro.models.model import LM
+from repro.optim.adamw import OptState
+from repro.roofline.analysis import (HW, collective_bytes, model_flops,
+                                     roofline_terms)
+from repro.train.step import (TrainHParams, TrainState, init_train_state,
+                              make_train_step)
+
+ARCHS = [
+    "llama4-scout-17b-a16e", "deepseek-v2-236b", "zamba2-2.7b",
+    "seamless-m4t-large-v2", "internvl2-26b", "qwen1.5-110b",
+    "starcoder2-7b", "qwen1.5-4b", "tinyllama-1.1b", "mamba2-130m",
+]
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+
+def cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if shape_name == "long_500k" and not cfg.supports_long:
+                continue
+            yield arch, shape_name
+
+
+# --------------------------------------------------------------------------
+
+
+def _depth_variants(cfg):
+    """(cfg@1unit, cfg@2units, true_unit_count)."""
+    r = dataclasses.replace
+    if cfg.family == "dense" or cfg.family == "ssm":
+        return r(cfg, n_layers=1), r(cfg, n_layers=2), cfg.n_layers
+    if cfg.family == "moe" and not cfg.use_mla:      # llama4 superblocks
+        ge = cfg.global_every
+        return (r(cfg, n_layers=ge), r(cfg, n_layers=2 * ge),
+                cfg.n_layers // ge)
+    if cfg.family == "moe":                           # deepseek
+        return (r(cfg, n_layers=2), r(cfg, n_layers=3),
+                cfg.n_layers - cfg.first_dense)
+    if cfg.family == "hybrid":
+        sa = cfg.shared_attn_every
+        return (r(cfg, n_layers=sa), r(cfg, n_layers=2 * sa),
+                cfg.n_layers // sa)
+    if cfg.family == "encdec":
+        return (r(cfg, n_layers=1, n_enc_layers=1),
+                r(cfg, n_layers=2, n_enc_layers=2), cfg.n_layers)
+    raise ValueError(cfg.family)
+
+
+def _param_struct(lm, dtype=None):
+    s = jax.eval_shape(lm.init, jax.random.key(0))
+    if dtype is not None:
+        s = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, dtype), s)
+    return s
+
+
+def _lower(lm, shape, mesh):
+    """Lower the right step for the shape kind → (lowered, n_in_bytes)."""
+    rep = NamedSharding(mesh, P())
+    pshard = lm.param_shardings()
+    in_sh = lm.input_shardings(shape)
+    specs = lm.input_specs(shape)
+
+    if shape.kind == "train":
+        # grad-accumulation microbatching keeps the saved-carry stack
+        # (L, B_micro, S, E) within HBM; wide models accumulate deeper,
+        # wide-MoE deeper still (dispatch all-gathers scale with T_micro)
+        # (see EXPERIMENTS.md §Dry-run)
+        if lm.cfg.d_model >= 5120 and lm.cfg.n_experts:
+            default = 16
+        elif lm.cfg.d_model >= 5120:
+            default = 8
+        else:
+            default = 4
+        hp = TrainHParams(
+            n_micro=int(os.environ.get("DRYRUN_NMICRO", str(default))))
+        step = make_train_step(lm.loss, hp, constrain=lm._c)
+        pstruct = _param_struct(lm)
+        state = jax.eval_shape(init_train_state, pstruct)
+        st_sh = TrainState(params=pshard,
+                           opt=OptState(mu=pshard, nu=pshard, count=rep),
+                           step=rep)
+        met_sh = {"loss": rep, "acc": rep, "grad_norm": rep, "lr": rep}
+        return jax.jit(step, in_shardings=(st_sh, in_sh),
+                       out_shardings=(st_sh, met_sh),
+                       donate_argnums=(0,)).lower(state, specs)
+
+    pstruct = _param_struct(lm, jnp.bfloat16)        # serving: bf16 params
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, batch)
+        return jax.jit(fn, in_shardings=(pshard, in_sh)).lower(pstruct, specs)
+
+    def fn(params, cache, token, pos):
+        return lm.decode_step(params, cache, token, pos)
+    return jax.jit(fn, in_shardings=(pshard, in_sh["cache"],
+                                     in_sh["token"], in_sh["pos"]),
+                   donate_argnums=(1,)
+                   ).lower(pstruct, specs["cache"], specs["token"],
+                           specs["pos"])
+
+
+def _make_lm(cfg, shape, mesh):
+    """LM with the dry-run's production policies: remat + Megatron-SP
+    residual-stream sequence sharding for attention-family train steps
+    (shrinks the saved-carry stack (L, B, S/tp, E) — DESIGN.md §4)."""
+    lm = LM(cfg, tp=mesh.shape["model"], mesh=mesh,
+            remat=shape.kind == "train")
+    # Megatron-SP residual seq sharding: a clear win for dense/MLA-MoE
+    # trains (§Perf Cell A), but GSPMD cannot reconcile it with llama4's
+    # chunked-attention superblocks (it replicates (B,H,S,S) f32 score
+    # stacks — measured 240 GiB/dev; §Perf refuted-hypothesis entry)
+    if shape.kind == "train" and cfg.family in ("dense", "moe", "encdec") \
+            and not cfg.chunk \
+            and os.environ.get("DRYRUN_SEQSHARD", "1") == "1":
+        lm.rules["act_seq"] = "model"
+    else:
+        # MoE token-dispatch rows: without Megatron-SP the incoming layout
+        # is batch-sharded only; a (data×model) "tokens" constraint forces
+        # a 256-way reshard of (T, d_model) (measured 135 GiB/dev on
+        # llama4 prefill) — keep dispatch dp-sharded instead
+        dp = lm.rules.get("batch")
+        lm.rules["tokens"] = dp
+    return lm
+
+
+def _measure_one(cfg, shape, mesh):
+    """Lower+compile one roofline variant with scans unrolled →
+    per-device (flops, bytes, collective_bytes)."""
+    lmv = _make_lm(cfg, shape, mesh)
+    with unroll_scans():
+        lo = _lower(lmv, shape, mesh)
+    co = lo.compile()
+    ca = co.cost_analysis()
+    cb = sum(collective_bytes(co.as_text()).values())
+    return (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0), float(cb))
+
+
+def _depth_extrapolate(cfg, shape, mesh):
+    cfg1, cfg2, n_units = _depth_variants(cfg)
+    v1 = _measure_one(cfg1, shape, mesh)
+    v2 = _measure_one(cfg2, shape, mesh)
+    # per-unit deltas clamped ≥ 0: GSPMD may pick slightly different
+    # layouts/fusions between the two lowers, which can dip tiny decode
+    # deltas below zero (noise, not signal)
+    return tuple(a + (n_units - 1) * max(0.0, b - a)
+                 for a, b in zip(v1, v2))
+
+
+def _roofline_measure(cfg, shape, mesh):
+    """Per-device (flops, bytes, coll) at full depth and sequence length.
+
+    SSM/hybrid full-sequence shapes would need the SSD chunk scan unrolled
+    (S/256 bodies per layer — intractable compile at 32k), so those cells
+    measure at S ∈ {2k, 4k, 8k} and fit a quadratic in S (SSD terms are
+    linear in S, attention quadratic) — exact for this model family.
+    """
+    long_scan = (cfg.family in ("ssm", "hybrid")
+                 and shape.kind in ("train", "prefill")
+                 and shape.seq_len > 8192)
+    if not long_scan:
+        return _depth_extrapolate(cfg, shape, mesh)
+
+    s_points = [2048, 4096, 8192]
+    vals = []
+    for s in s_points:
+        sh = dataclasses.replace(shape, seq_len=s)
+        vals.append(_depth_extrapolate(cfg, sh, mesh))
+    import numpy as np
+    out = []
+    for i in range(3):
+        ys = [v[i] for v in vals]
+        coef = np.polyfit(np.asarray(s_points, float), np.asarray(ys), 2)
+        out.append(float(np.polyval(coef, float(shape.seq_len))))
+    return tuple(max(0.0, v) for v in out)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             roofline: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    out: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "multi" if multi_pod else "single",
+                 "n_devices": n_dev}
+
+    # ---- full-depth compile: validity + memory ----
+    t0 = time.time()
+    lm = _make_lm(cfg, shape, mesh)
+    lowered = _lower(lm, shape, mesh)
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_GiB": ma.argument_size_in_bytes / 2**30,
+        "output_GiB": ma.output_size_in_bytes / 2**30,
+        "temp_GiB": ma.temp_size_in_bytes / 2**30,
+        "alias_GiB": ma.alias_size_in_bytes / 2**30,
+        "total_GiB": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                      + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        / 2**30,
+    }
+    full_ca = compiled.cost_analysis()
+    out["hlo_collective_counts"] = {
+        k: v for k, v in sorted(collective_bytes(compiled.as_text()).items())}
+
+    if not roofline:
+        return out
+
+    flops, bytes_, coll = _roofline_measure(cfg, shape, mesh)
+    out["per_device"] = {"hlo_flops": flops, "hlo_bytes": bytes_,
+                         "collective_bytes": coll}
+
+    mf = model_flops(cfg, shape)
+    terms = roofline_terms(flops, bytes_, coll)
+    out["roofline"] = {
+        **terms,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / flops if flops else 0.0,
+    }
+    return out
+
+
+def load_results() -> dict:
+    try:
+        with open(RESULTS) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def save_results(res: dict):
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    for arch, shape in cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        for mp in ((False, True) if args.mesh == "both" else
+                   ((args.mesh == "multi"),)):
+            # roofline table is single-pod only (brief); multi proves pod axis
+            todo.append((arch, shape, mp))
+
+    results = load_results()
+    failures = 0
+    for arch, shape, mp in todo:
+        key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+        if key in results and not args.force and \
+                "error" not in results[key]:
+            print(f"[skip] {key}")
+            continue
+        print(f"[run ] {key} ...", flush=True)
+        try:
+            roof = (not args.no_roofline) and not mp
+            res = run_cell(arch, shape, mp, roofline=roof)
+            results[key] = res
+            mem = res["memory"]["total_GiB"]
+            msg = f"  ok compile={res['compile_s']}s mem/dev={mem:.2f}GiB"
+            if "roofline" in res:
+                r = res["roofline"]
+                msg += (f" bottleneck={r['bottleneck']}"
+                        f" frac={r['roofline_fraction']:.3f}")
+            print(msg, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            results[key] = {"arch": arch, "shape": shape,
+                            "mesh": "multi" if mp else "single",
+                            "error": f"{type(e).__name__}: {e}",
+                            "trace": traceback.format_exc()[-2000:]}
+            print(f"  FAIL {type(e).__name__}: {str(e)[:200]}", flush=True)
+        save_results(results)
+    print(f"done: {len(todo)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh factory (DESIGN.md §4, brief: MULTI-POD DRY-RUN).
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: (data=16, model=16) = 256 chips; multi-pod adds a
+leading pure-DP "pod" axis: (pod=2, data=16, model=16) = 512 chips.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_from_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_from_devices(devices, *, model: int = 16):
+    """Elastic re-mesh: build the largest (data, model) mesh from a live
+    device list (fault_tolerance.ElasticRunner hook)."""
+    n = len(devices)
+    model = min(model, n)
+    data = n // model
+    import numpy as np
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(dev, ("data", "model"))

@@ -1,0 +1,65 @@
+"""Serving launcher: sharded batched greedy decode on a mesh.
+
+    python -m repro.launch.serve --arch qwen1.5-4b --mesh host8 --batch 8
+"""
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mesh", default="host8")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    if args.mesh.startswith("host"):
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={int(args.mesh[4:])}"
+    elif args.mesh in ("single", "multi"):
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.configs.reduce import reduced
+    from repro.launch.mesh import make_production_mesh, mesh_from_devices
+    from repro.models.model import LM
+    from repro.serve.decode import generate
+
+    if args.mesh in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        tp = 16
+    else:
+        mesh = mesh_from_devices(jax.devices(),
+                                 model=min(2, len(jax.devices())))
+        tp = mesh.shape["model"]
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    lm = LM(cfg, tp=tp, mesh=mesh, remat=False)
+    with mesh:
+        params = jax.jit(lm.init,
+                         out_shardings=lm.param_shardings())(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len), np.int32))
+        gen = jax.jit(lambda p, t: generate(lm, p, t, max_new=args.max_new))
+        out = jax.block_until_ready(gen(params, prompts))
+        t0 = time.time()
+        out = jax.block_until_ready(gen(params, prompts))
+        dt = time.time() - t0
+    print(f"{cfg.name}: {out.shape} in {dt*1000:.0f} ms "
+          f"({args.batch*args.max_new/dt:,.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

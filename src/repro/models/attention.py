@@ -1,0 +1,186 @@
+"""GQA/MHA attention block with RoPE, optional QKV bias, sliding-window and
+chunked-local variants, and a decode path over (ring-buffer) KV caches.
+
+Head padding for tensor parallelism: jit rejects uneven shardings, so when
+``heads`` is sharded over a ``model`` axis of size TP the *parameter* head
+count is padded so it divides TP.  Padding happens **within each KV group**
+(layout ``(hkv, rep)``), preserving the true q→kv grouping; a head mask
+zeroes the padded heads' contribution after attention, so the padded model
+is exactly the true model (the extra FLOPs show up honestly in the
+MODEL_FLOPS/HLO_FLOPs roofline ratio).  KV heads that cannot shard evenly
+stay replicated (Megatron TP-GQA duplication) or are padded when neither
+divides — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamDef, apply_rope, attention, blockwise_attention,
+                     rotary)
+
+__all__ = ["AttnCfg", "attn_defs", "attn_apply", "attn_decode", "pad_heads"]
+
+BLOCKWISE_THRESHOLD = 8192   # use online-softmax scan above this KV length
+
+
+def pad_heads(n: int, tp: int) -> int:
+    """Round head count up to a multiple of tp."""
+    return -(-n // tp) * tp
+
+
+class AttnCfg(NamedTuple):
+    d_model: int
+    n_heads: int          # true (unpadded) query heads
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int = 0       # sliding window (starcoder2)
+    chunk: int = 0        # chunked local attention (llama4)
+    use_rope: bool = True
+    tp: int = 16          # model-axis size used for head padding
+
+    @property
+    def g(self) -> int:    # true q heads per kv group
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def hkv(self) -> int:  # effective kv heads (padded only if needed)
+        if self.n_kv_heads % self.tp == 0 or self.tp % self.n_kv_heads == 0:
+            return self.n_kv_heads
+        return pad_heads(self.n_kv_heads, self.tp)
+
+    @property
+    def rep(self) -> int:  # padded group size: smallest r>=g with hkv·r % tp == 0
+        r = max(1, self.g if self.hkv == self.n_kv_heads else 1)
+        while (self.hkv * r) % self.tp:
+            r += 1
+        return r
+
+    @property
+    def hq(self) -> int:   # effective (padded) query heads
+        return self.hkv * self.rep
+
+    def head_mask(self) -> jax.Array:
+        """(hkv, rep) bool — True for real heads."""
+        kv_ok = jnp.arange(self.hkv) < self.n_kv_heads
+        g_ok = jnp.arange(self.rep) < self.g
+        return kv_ok[:, None] & g_ok[None, :]
+
+
+def attn_defs(c: AttnCfg) -> dict:
+    e, hq, hkv, d = c.d_model, c.hq, c.hkv, c.head_dim
+    defs = {
+        "wq": ParamDef((e, hq, d), ("embed", "heads", None)),
+        "wk": ParamDef((e, hkv, d), ("embed", "kv_heads", None)),
+        "wv": ParamDef((e, hkv, d), ("embed", "kv_heads", None)),
+        "wo": ParamDef((hq, d, e), ("heads", None, "embed")),
+    }
+    if c.qkv_bias:
+        defs.update({
+            "bq": ParamDef((hq, d), ("heads", None), init="zeros"),
+            "bk": ParamDef((hkv, d), ("kv_heads", None), init="zeros"),
+            "bv": ParamDef((hkv, d), ("kv_heads", None), init="zeros"),
+        })
+    return defs
+
+
+def _project_qkv(c: AttnCfg, p: dict, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(x.dtype))
+    if c.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if c.use_rope:
+        cos, sin = rotary(positions, c.head_dim, c.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _mask_heads(c: AttnCfg, out: jax.Array) -> jax.Array:
+    """Zero padded heads. out: (B, S, hq, D) laid out as (hkv, rep)."""
+    if c.hq == c.n_heads:
+        return out
+    m = c.head_mask().reshape(1, 1, c.hq, 1)
+    return out * m.astype(out.dtype)
+
+
+def attn_apply(c: AttnCfg, p: dict, x: jax.Array, *, kind: str = "causal",
+               q_offset: int = 0) -> tuple[jax.Array, tuple]:
+    """Full-sequence attention (train / prefill). x: (B, S, E).
+
+    Returns (y, (k, v)) so prefill can emit the KV cache.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + q_offset
+    q, k, v = _project_qkv(c, p, x, positions)
+    fn = blockwise_attention if s > BLOCKWISE_THRESHOLD else attention
+    out = fn(q, k, v, kind=kind, window=c.window, chunk=c.chunk,
+             q_offset=q_offset)
+    out = _mask_heads(c, out)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def attn_decode(c: AttnCfg, p: dict, x: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, pos: jax.Array, constrain=None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, E); cache: (B, S_cache, hkv, D) holding
+    rotated keys; ``pos``: current absolute position (scalar int32).
+
+    Sliding-window / chunked layers use a ring buffer of size
+    ``S_cache ∈ {window, chunk}`` — write index ``pos % S_cache``; masking
+    keeps exactly the positions a full cache would have kept.
+    """
+    b, _, _ = x.shape
+    s_cache = cache_k.shape[1]
+    q, k, v = _project_qkv(c, p, x, pos[None])
+    ring = bool(c.window or c.chunk)
+    slot = pos % s_cache if ring else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+
+    idx = jnp.arange(s_cache)
+    if ring:
+        # absolute position stored in each ring slot
+        abs_pos = jnp.where(idx <= slot, pos - (slot - idx),
+                            pos + (idx - slot) - s_cache)
+        if c.chunk:
+            start = (pos // c.chunk) * c.chunk
+            valid = (abs_pos >= start) & (abs_pos <= pos) & (abs_pos >= 0)
+        else:
+            valid = (abs_pos > pos - c.window) & (abs_pos <= pos) & \
+                (abs_pos >= 0)
+    else:
+        valid = idx <= pos
+
+    from .common import expand_kv
+    # sequence-parallel decode attention: ONLY when KV heads cannot shard
+    # over the model axis, pin the expanded K/V and the score k-dim to the
+    # cache's seq sharding — otherwise GSPMD reshards the whole cache to
+    # head sharding via f32 all-gathers (2 GiB × n_layers on internvl2,
+    # §Perf hillclimb 3).  When heads DO shard, constraints must stay off:
+    # P(...None...) dims mean "replicate", which forces a worse layout
+    # (measured 194 GiB/dev on qwen4b decode).
+    if constrain is None or c.hkv % max(1, c.tp) == 0:
+        constrain = lambda t, *a: t  # noqa: E731
+    ke = constrain(expand_kv(cache_k, c.rep), "batch", "kv_seq", None, None)
+    ve = constrain(expand_kv(cache_v, c.rep), "batch", "kv_seq", None, None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ke,
+                        preferred_element_type=jnp.float32) \
+        / (c.head_dim ** 0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    scores = constrain(scores, "batch", None, None, "kv_seq")
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+    out = _mask_heads(c, out)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v

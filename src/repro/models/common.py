@@ -1,0 +1,237 @@
+"""Shared model machinery: parameter definitions (single source of truth for
+init *and* sharding), norms, rotary embeddings, and attention math.
+
+Every module defines its parameters once as a nested dict of ``ParamDef``;
+``init_params`` materializes arrays and ``specs`` derives the
+``PartitionSpec`` tree from logical-axis rules — so a sharding change is a
+rules change, never a model change.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ParamDef", "init_params", "specs", "count_params", "rms_norm",
+           "rotary", "apply_rope", "attention", "blockwise_attention",
+           "DEFAULT_RULES", "scan", "unroll_scans"]
+
+# --------------------------------------------------------------------------
+# scan wrapper with a trace-time unroll switch.
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so cost_analysis on a scanned layer stack under-reports FLOPs by
+# ~n_layers.  The roofline pass therefore lowers small-depth configs inside
+# ``unroll_scans()`` (full unroll → exact op counts) and extrapolates to the
+# true depth; the memory/compile dry-run keeps compact scans (DESIGN.md §7,
+# EXPERIMENTS.md §Roofline-method).
+
+_SCAN_UNROLL = False
+_KV_BLOCK_OVERRIDE: int | None = None
+
+
+@contextlib.contextmanager
+def unroll_scans(kv_block: int | None = 4096):
+    """Roofline lowering mode: scans fully unroll; blockwise attention uses
+    a larger KV block (identical FLOP/byte totals, ~4× fewer unrolled
+    bodies → tractable compile)."""
+    global _SCAN_UNROLL, _KV_BLOCK_OVERRIDE
+    prev = (_SCAN_UNROLL, _KV_BLOCK_OVERRIDE)
+    _SCAN_UNROLL, _KV_BLOCK_OVERRIDE = True, kv_block
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL, _KV_BLOCK_OVERRIDE = prev
+
+
+def scan(body, init, xs, **kw):
+    if _SCAN_UNROLL:
+        kw = {**kw, "unroll": True}
+    return jax.lax.scan(body, init, xs, **kw)
+
+
+class ParamDef(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis name (str) or None per dim
+    init: str = "normal"             # normal | zeros | ones
+    scale: float | None = None       # stddev; default 1/sqrt(fan_in)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a nested dict of ParamDef → arrays (deterministic by path)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    arrays = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            arrays.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            arrays.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            arrays.append(scale * jax.random.normal(k, d.shape, dtype))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "embed": "data",          # FSDP: weight d_model dim sharded over data
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",      # only when divisible; configs override to None
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "layers": None,
+    "seq": None,
+    "conv": None,
+}
+
+
+def specs(defs, rules: dict[str, Any]):
+    """ParamDef tree → PartitionSpec tree via logical-axis rules."""
+    def one(d: ParamDef):
+        return P(*(rules.get(a) if a is not None else None for a in d.axes))
+    return jax.tree.map(one, defs, is_leaf=_is_def)
+
+
+def count_params(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "theta"))
+def _rope_tables(positions: jax.Array, dim: int, theta: float):
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv    # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rotary(positions: jax.Array, dim: int, theta: float = 1e4):
+    """→ (cos, sin), each (..., dim/2)."""
+    return _rope_tables(positions, dim, theta)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos, sin = cos[..., None, :], sin[..., None, :]   # broadcast over heads
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention math (mask kinds: "causal" | "bidir" | windowed / chunked causal)
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, kind: str, window: int,
+          chunk: int) -> jax.Array:
+    m = kpos[None, :] <= qpos[:, None] if kind == "causal" else \
+        jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if window:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    if chunk:
+        m &= (kpos[None, :] // chunk) == (qpos[:, None] // chunk)
+    return m
+
+
+def expand_kv(k: jax.Array, rep: int) -> jax.Array:
+    """GQA: repeat KV heads to the (padded) query head count.
+
+    Flat-head layout (no (hkv, rep) reshape) keeps the head axis shardable
+    through GSPMD — reshaping a sharded head dim forces replication and a
+    ~rep× blow-up of the score tensor (observed in the dry-run).
+    """
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              kind: str = "causal", window: int = 0, chunk: int = 0,
+              q_offset: int = 0) -> jax.Array:
+    """Masked MHA/GQA. q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D); Hq % Hkv == 0."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    k = expand_kv(k, hq // hkv)
+    v = expand_kv(v, hq // hkv)
+    # emit f32 scores straight from the MXU: a separate bf16→f32 convert
+    # pass over the (B,H,Sq,Sk) tensor dominated HLO bytes (§Perf)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / (d ** 0.5)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    m = _mask(qpos, kpos, kind, window, chunk)
+    scores = jnp.where(m[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out.reshape(b, sq, hq, dv)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        kind: str = "causal", window: int = 0, chunk: int = 0,
+                        kv_block: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention, scanned over KV blocks (flash-style).
+
+    Never materializes the (Sq, Sk) score matrix — transient memory is
+    (B, H, Sq, kv_block).  Used for long-sequence prefill/train shapes.
+    """
+    if _KV_BLOCK_OVERRIDE is not None and _SCAN_UNROLL:
+        kv_block = _KV_BLOCK_OVERRIDE
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    k = expand_kv(k, hq // hkv)
+    v = expand_kv(v, hq // hkv)
+    nblk = -(-sk // kv_block)
+    pad = nblk * kv_block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, kv_block, hq, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, kv_block, hq, dv).transpose(1, 0, 2, 3, 4)
+    qh = (q / (d ** 0.5)).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, blk):
+        acc, m_run, l_run, i = carry
+        kblk, vblk = blk
+        kpos = i * kv_block + jnp.arange(kv_block)
+        msk = _mask(qpos, kpos, kind, window, chunk) & (kpos < sk)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, kblk.astype(jnp.float32))
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (acc, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, hq, sq, dv), jnp.float32)
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    (acc, m_run, l_run, _), _ = scan(body, (acc0, m0, l0, 0), (kb, vb))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,191 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention"
+term (matmuls → MXU) + inter-chunk state recurrence (``lax.scan`` over
+chunks), transient memory O(S·Q) instead of O(S²).  Decode is the O(1)
+recurrent step over the carried ``(conv_state, ssm_state)``.
+
+Single B/C group (ngroups=1), as in the assigned configs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, rms_norm
+from .common import scan as lax_scan
+
+__all__ = ["MambaCfg", "mamba_defs", "mamba_apply", "mamba_decode",
+           "mamba_init_state"]
+
+
+class MambaCfg(NamedTuple):
+    d_model: int
+    d_state: int = 128        # N
+    head_dim: int = 64        # P
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    norm_eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def mamba_defs(c: MambaCfg) -> dict:
+    return {
+        "in_proj": ParamDef((c.d_model, c.d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((c.conv_dim, c.conv_kernel), ("ssm_inner", "conv"),
+                           scale=c.conv_kernel ** -0.5),
+        "conv_b": ParamDef((c.conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef((c.n_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((c.n_heads,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((c.n_heads,), ("ssm_heads",), init="ones"),
+        "norm_w": ParamDef((c.d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((c.d_inner, c.d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(c: MambaCfg, zxbcdt: jax.Array):
+    return jnp.split(zxbcdt, [c.d_inner, c.d_inner + c.conv_dim], axis=-1)
+
+
+def _causal_conv(c: MambaCfg, p: dict, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, conv_dim)."""
+    k = c.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(xbc.dtype)                       # (C, K)
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[None, None, :, i]
+              for i in range(k))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunk_scan(c: MambaCfg, x: jax.Array, dt: jax.Array, b_in: jax.Array,
+                    c_in: jax.Array, a: jax.Array, h0: jax.Array):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); b/c: (B,S,N); a: (H,) < 0.
+
+    Returns (y (B,S,H,P) fp32, h_final (B,H,P,N) fp32).
+    """
+    bsz, s, h, pdim = x.shape
+    n = b_in.shape[-1]
+    q = min(c.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def chunkify(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xq, dtq, bq, cq = map(chunkify, (x, dt, b_in, c_in))
+
+    def body(h_prev, inp):
+        xk, dtk, bk, ck = inp                               # (B,Q,...)
+        dta = dtk.astype(jnp.float32) * a                   # (B,Q,H) ≤ 0
+        cum = jnp.cumsum(dta, axis=1)                       # (B,Q,H)
+        bx = dtk[..., None].astype(jnp.float32) * xk.astype(jnp.float32)
+        # intra-chunk: decay matrix (B,Q,K,H), causal
+        li = cum[:, :, None] - cum[:, None]                 # (B,Q,K,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        dec = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", cb, dec, bx)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", ck.astype(jnp.float32),
+                             h_prev) * jnp.exp(cum)[..., None]
+        # next state
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)             # (B,K,H)
+        s_chunk = jnp.einsum("bkh,bkhp,bkn->bhpn", dec_end, bx,
+                             bk.astype(jnp.float32))
+        h_next = jnp.exp(cum[:, -1])[..., None, None] * h_prev + s_chunk
+        return h_next, y_intra + y_inter
+
+    h_final, y = lax_scan(body, h0, (xq, dtq, bq, cq))
+    y = y.swapaxes(0, 1).reshape(bsz, s, h, pdim)
+    return y, h_final
+
+
+def mamba_apply(c: MambaCfg, p: dict, xin: jax.Array, *,
+                h0: jax.Array | None = None):
+    """Full-sequence forward. xin: (B, S, E) → (y (B,S,E), final states)."""
+    bsz, s, _ = xin.shape
+    zxbcdt = xin @ p["in_proj"].astype(xin.dtype)
+    z, xbc, dt_raw = _split_proj(c, zxbcdt)
+    xbc = _causal_conv(c, p, xbc)
+    x, b_in, c_in = jnp.split(xbc, [c.d_inner, c.d_inner + c.d_state], -1)
+    x = x.reshape(bsz, s, c.n_heads, c.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, c.n_heads, c.head_dim, c.d_state), jnp.float32)
+    # pad to a chunk multiple; dt=0 on padding ⇒ identity state update
+    q = min(c.chunk, s)
+    sp = -(-s // q) * q
+    if sp != s:
+        pad = [(0, 0), (0, sp - s)]
+        xq = jnp.pad(x, pad + [(0, 0), (0, 0)])
+        dtq = jnp.pad(dt, pad + [(0, 0)])
+        bq = jnp.pad(b_in, pad + [(0, 0)])
+        cq = jnp.pad(c_in, pad + [(0, 0)])
+        y, h_final = _ssd_chunk_scan(c, xq, dtq, bq, cq, a, h0)
+        y = y[:, :s]
+    else:
+        y, h_final = _ssd_chunk_scan(c, x, dt, b_in, c_in, a, h0)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(bsz, s, c.d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], c.norm_eps)
+    # last K-1 pre-activation conv inputs (for decode continuation)
+    conv_state = jnp.swapaxes(
+        zxbcdt[:, -(c.conv_kernel - 1):, c.d_inner:c.d_inner + c.conv_dim],
+        1, 2)
+    return y @ p["out_proj"].astype(xin.dtype), (conv_state, h_final)
+
+
+def mamba_init_state(c: MambaCfg, batch: int, dtype=jnp.bfloat16):
+    conv_state = jnp.zeros((batch, c.conv_dim, c.conv_kernel - 1), dtype)
+    ssm_state = jnp.zeros((batch, c.n_heads, c.head_dim, c.d_state),
+                          jnp.float32)
+    return conv_state, ssm_state
+
+
+def mamba_decode(c: MambaCfg, p: dict, xin: jax.Array, conv_state: jax.Array,
+                 ssm_state: jax.Array):
+    """One-token recurrent step. xin: (B, 1, E)."""
+    bsz = xin.shape[0]
+    zxbcdt = (xin[:, 0] @ p["in_proj"].astype(xin.dtype))   # (B, dproj)
+    z, xbc_new, dt_raw = _split_proj(c, zxbcdt)
+    # conv: window = state ++ new sample
+    win = jnp.concatenate([conv_state, xbc_new[:, :, None]], -1)  # (B,C,K)
+    w = p["conv_w"].astype(xin.dtype)
+    xbc = jax.nn.silu((win * w[None]).sum(-1) + p["conv_b"].astype(xin.dtype))
+    conv_state = win[:, :, 1:]
+    x, b_in, c_in = jnp.split(xbc, [c.d_inner, c.d_inner + c.d_state], -1)
+    x = x.reshape(bsz, c.n_heads, c.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                   # (B,H)
+    bx = jnp.einsum("bh,bhp,bn->bhpn", dt, x, b_in.astype(jnp.float32))
+    ssm_state = decay[..., None, None] * ssm_state + bx
+    y = jnp.einsum("bn,bhpn->bhp", c_in.astype(jnp.float32), ssm_state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(bsz, 1, c.d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p["norm_w"], c.norm_eps)
+    return y @ p["out_proj"].astype(xin.dtype), conv_state, ssm_state

@@ -1,0 +1,159 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV compressed to a per-token latent ``c_kv`` of rank ``kv_lora`` (plus a
+decoupled RoPE key ``k_pe`` shared across heads); queries via a rank
+``q_lora`` bottleneck.  The decode cache stores only ``(c_kv, k_pe)`` —
+the memory win that defines MLA.
+
+Implementation is the explicit (non-absorbed) form: decompress per-head
+K/V, then standard attention.  Weight absorption (folding ``w_uk`` into
+the query and ``w_uv`` into the output projection so decode attends in
+latent space) is a §Perf hillclimb lever — see EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, apply_rope, attention, blockwise_attention, \
+    rms_norm, rotary
+
+__all__ = ["MLACfg", "mla_defs", "mla_apply", "mla_decode"]
+
+
+class MLACfg(NamedTuple):
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    q_lora: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+    tp: int = 16
+
+    @property
+    def hq(self) -> int:
+        return -(-self.n_heads // self.tp) * self.tp
+
+    @property
+    def qk_dim(self) -> int:
+        return self.nope_head_dim + self.rope_head_dim
+
+
+def mla_defs(c: MLACfg) -> dict:
+    e, h = c.d_model, c.hq
+    return {
+        "w_dq": ParamDef((e, c.q_lora), ("embed", None)),
+        "q_norm": ParamDef((c.q_lora,), (None,), init="ones"),
+        "w_uq": ParamDef((c.q_lora, h, c.qk_dim), (None, "heads", None)),
+        "w_dkv": ParamDef((e, c.kv_lora), ("embed", None)),
+        "kv_norm": ParamDef((c.kv_lora,), (None,), init="ones"),
+        "w_kpe": ParamDef((e, c.rope_head_dim), ("embed", None)),
+        "w_uk": ParamDef((c.kv_lora, h, c.nope_head_dim),
+                         (None, "heads", None)),
+        "w_uv": ParamDef((c.kv_lora, h, c.v_head_dim), (None, "heads", None)),
+        "wo": ParamDef((h, c.v_head_dim, e), ("heads", None, "embed")),
+    }
+
+
+def _mask_heads(c: MLACfg, out: jax.Array) -> jax.Array:
+    if c.hq == c.n_heads:
+        return out
+    m = (jnp.arange(c.hq) < c.n_heads).reshape(1, 1, c.hq, 1)
+    return out * m.astype(out.dtype)
+
+
+def _queries(c: MLACfg, p: dict, x: jax.Array, positions: jax.Array):
+    cq = rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"])
+    q = jnp.einsum("bsl,lhd->bshd", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_pe = jnp.split(q, [c.nope_head_dim], axis=-1)
+    cos, sin = rotary(positions, c.rope_head_dim, c.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    return jnp.concatenate([q_nope, q_pe], -1)          # (B,S,H,qk_dim)
+
+
+def _latents(c: MLACfg, p: dict, x: jax.Array, positions: jax.Array):
+    ckv = rms_norm(x @ p["w_dkv"].astype(x.dtype), p["kv_norm"])  # (B,S,L)
+    kpe = (x @ p["w_kpe"].astype(x.dtype))[:, :, None, :]         # (B,S,1,Dr)
+    cos, sin = rotary(positions, c.rope_head_dim, c.rope_theta)
+    kpe = apply_rope(kpe, cos, sin)[:, :, 0]                      # (B,S,Dr)
+    return ckv, kpe
+
+
+def _decompress(c: MLACfg, p: dict, ckv: jax.Array, kpe: jax.Array,
+                dtype) -> tuple[jax.Array, jax.Array]:
+    k_nope = jnp.einsum("bsl,lhd->bshd", ckv, p["w_uk"].astype(dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe[:, :, None, :],
+                                  (*k_nope.shape[:3], c.rope_head_dim))], -1)
+    v = jnp.einsum("bsl,lhd->bshd", ckv, p["w_uv"].astype(dtype))
+    return k, v
+
+
+def mla_apply(c: MLACfg, p: dict, x: jax.Array, *, q_offset: int = 0
+              ) -> tuple[jax.Array, tuple]:
+    """Train / prefill.  Returns (y, (c_kv, k_pe)) — the latent cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + q_offset
+    q = _queries(c, p, x, positions)
+    ckv, kpe = _latents(c, p, x, positions)
+    k, v = _decompress(c, p, ckv, kpe, x.dtype)
+    fn = blockwise_attention if s > 8192 else attention
+    # pad v head_dim up to qk_dim for the shared helper? dims differ — do
+    # attention inline (v_head_dim != qk_dim is fine for einsum helpers).
+    out = fn(q, k, v, kind="causal", q_offset=q_offset)
+    out = _mask_heads(c, out)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return y, (ckv, kpe)
+
+
+def mla_decode(c: MLACfg, p: dict, x: jax.Array, cache_ckv: jax.Array,
+               cache_kpe: jax.Array, pos: jax.Array, *,
+               absorbed: bool = True):
+    """One-token decode over the latent cache.
+
+    cache_ckv: (B, S, kv_lora); cache_kpe: (B, S, rope_head_dim).
+
+    ``absorbed=True`` (default; §Perf hillclimb): fold ``w_uk`` into the
+    query and ``w_uv`` into the output projection so attention runs in the
+    512-dim latent space — per-token FLOPs O(H·S·kv_lora) instead of
+    decompressing the whole cache to per-head K/V
+    (O(S·kv_lora·H·(d_nope+d_v)), a ~(d_nope+d_v)=256× blow-up at S=32k).
+    ``absorbed=False`` keeps the paper-explicit form (used to cross-check
+    numerics in tests).
+    """
+    b = x.shape[0]
+    q = _queries(c, p, x, pos[None])                      # (B,1,H,qk)
+    ckv, kpe = _latents(c, p, x, pos[None])
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv, (0, pos, 0))
+    cache_kpe = jax.lax.dynamic_update_slice(cache_kpe, kpe, (0, pos, 0))
+    s_cache = cache_ckv.shape[1]
+    valid = jnp.arange(s_cache) <= pos
+    q_nope, q_pe = jnp.split(q, [c.nope_head_dim], axis=-1)
+
+    if absorbed:
+        # q ← q·W_uk : (B,1,H,L); scores against the latent cache directly
+        q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope,
+                           p["w_uk"].astype(x.dtype))
+        scores = (jnp.einsum("bqhl,bkl->bhqk", q_abs, cache_ckv)
+                  + jnp.einsum("bqhd,bkd->bhqk", q_pe, cache_kpe)) \
+            / (c.qk_dim ** 0.5)
+        scores = jnp.where(valid[None, None, None],
+                           scores.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        lat = jnp.einsum("bhqk,bkl->bqhl", w, cache_ckv)  # (B,1,H,L)
+        out = jnp.einsum("bqhl,lhd->bqhd", lat, p["w_uv"].astype(x.dtype))
+    else:
+        k, v = _decompress(c, p, cache_ckv, cache_kpe, x.dtype)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (c.qk_dim ** 0.5)
+        scores = jnp.where(valid[None, None, None],
+                           scores.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    out = _mask_heads(c, out)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return y, cache_ckv, cache_kpe

@@ -1,0 +1,723 @@
+"""Architecture assembly: builds every assigned arch from its ModelConfig.
+
+One class (``LM``) exposes a uniform API used by train/serve/dry-run:
+
+- ``init(key)`` / ``param_specs()``        — parameters + shardings
+- ``loss(params, batch)``                  — next-token CE (train_step body)
+- ``prefill(params, batch)``               — full-sequence forward → cache
+- ``init_cache(batch, cache_len)``         — zeroed decode state
+- ``decode_step(params, cache, token, pos)``— one-token greedy decode
+  (argmax without softmax — the paper's "relative magnitude suffices")
+- ``input_specs(shape)`` / ``input_shardings(shape)`` — dry-run stand-ins
+
+Families: dense (tinyllama / qwen4b / qwen110b / starcoder2 / internvl2),
+moe (llama4 superblocks, deepseek MLA+MoE), ssm (mamba2), hybrid (zamba2),
+encdec (seamless).  Layer stacks are ``lax.scan`` over stacked params
+(+ remat) for compact HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.popcount import argmax_tournament
+from repro.distributed.sharding import (batch_axes, constrainer, make_rules,
+                                        named_sharding)
+from jax.sharding import PartitionSpec as P
+
+from .attention import AttnCfg, attn_apply, attn_decode, attn_defs
+from .common import ParamDef, init_params, rms_norm, specs
+from .common import scan as lax_scan
+from .mamba2 import (MambaCfg, mamba_apply, mamba_decode, mamba_defs,
+                     mamba_init_state)
+from .mla import MLACfg, mla_apply, mla_decode, mla_defs
+from .moe import MoECfg, mlp_apply, mlp_defs, moe_apply, moe_defs
+
+__all__ = ["LM"]
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale),
+        defs, is_leaf=_is_def)
+
+
+def _norm_def(e: int) -> ParamDef:
+    return ParamDef((e,), (None,), init="ones")
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, *, tp: int = 1, mesh=None,
+                 remat: bool = True, compute_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.tp = tp
+        self.mesh = mesh
+        self.remat = remat
+        self.dtype = compute_dtype
+        self.rules = make_rules(mesh, cfg.rules_overrides)
+        self._c = constrainer(mesh, self.rules)
+        self._dp_extent = 1
+        if mesh is not None:
+            for a in ("pod", "data"):
+                if a in mesh.shape:
+                    self._dp_extent *= mesh.shape[a]
+        self._build()
+
+    # ------------------------------------------------------------------ build
+    def _build(self):
+        c = self.cfg
+        if c.family in ("dense", "moe", "encdec"):
+            if c.use_mla:
+                self.mla_cfg = MLACfg(
+                    c.d_model, c.n_heads, kv_lora=c.kv_lora, q_lora=c.q_lora,
+                    rope_head_dim=c.rope_head_dim,
+                    nope_head_dim=c.nope_head_dim, v_head_dim=c.v_head_dim,
+                    rope_theta=c.rope_theta, tp=self.tp)
+            else:
+                self.attn_cfg = AttnCfg(
+                    c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
+                    qkv_bias=c.qkv_bias, rope_theta=c.rope_theta,
+                    window=c.window, chunk=0, tp=self.tp)
+                if c.chunk:  # llama4: local layers chunked, global NoPE
+                    self.attn_local = self.attn_cfg._replace(chunk=c.chunk)
+                    self.attn_global = self.attn_cfg._replace(use_rope=False)
+        if c.n_experts:
+            self.moe_cfg = MoECfg(
+                c.d_model, c.n_experts, c.top_k, c.moe_d_ff,
+                n_shared=c.n_shared_experts, shared_d_ff=c.shared_d_ff)
+        if c.family in ("ssm", "hybrid"):
+            self.mamba_cfg = MambaCfg(
+                c.d_model, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                expand=c.ssm_expand, conv_kernel=c.conv_kernel,
+                chunk=c.ssm_chunk, norm_eps=c.norm_eps)
+        if c.family == "hybrid":
+            self.attn_cfg = AttnCfg(
+                c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
+                rope_theta=c.rope_theta, tp=self.tp)
+
+        # auto-demote rules whose dims cannot divide the model axis
+        # (e.g. 4 KV heads on a 16-way axis stay replicated — DESIGN.md §4)
+        tp = max(1, self.tp)
+        if hasattr(self, "attn_cfg") and self.attn_cfg.hkv % tp:
+            self.rules["kv_heads"] = None
+            # decode runs sequence-parallel over the KV cache instead
+            self.rules["kv_seq"] = "model" if self.mesh is not None else None
+        else:
+            self.rules["kv_seq"] = None
+        if hasattr(self, "mamba_cfg"):
+            m = self.mamba_cfg
+            if any(d % tp for d in (m.d_in_proj, m.conv_dim, m.d_inner)):
+                self.rules["ssm_inner"] = None
+            if m.n_heads % tp:
+                self.rules["ssm_heads"] = None
+
+    # ------------------------------------------------------------ param defs
+    def param_defs(self) -> dict:
+        c = self.cfg
+        e, vp = c.d_model, c.padded_vocab
+        defs: dict[str, Any] = {
+            "embed": ParamDef((vp, e), ("vocab", "embed"), scale=0.02),
+            "final_norm": _norm_def(e),
+        }
+        if not c.tie_embeddings:
+            defs["lm_head"] = ParamDef((e, vp), ("embed", "vocab"))
+
+        if c.family == "dense":
+            layer = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                     "attn": attn_defs(self.attn_cfg),
+                     "mlp": mlp_defs(e, c.d_ff)}
+            defs["layers"] = _stack(layer, c.n_layers)
+
+        elif c.family == "moe" and not c.use_mla:   # llama4 superblocks
+            nsb = c.n_layers // c.global_every
+            nloc = c.global_every - 1
+            local = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                     "attn": attn_defs(self.attn_local),
+                     "moe": moe_defs(self.moe_cfg)}
+            glob = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                    "attn": attn_defs(self.attn_global),
+                    "moe": moe_defs(self.moe_cfg)}
+            defs["blocks"] = _stack({"local": _stack(local, nloc),
+                                     "global": glob}, nsb)
+
+        elif c.family == "moe":                      # deepseek (MLA)
+            first = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                     "attn": mla_defs(self.mla_cfg),
+                     "mlp": mlp_defs(e, c.d_ff)}
+            rest = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                    "attn": mla_defs(self.mla_cfg),
+                    "moe": moe_defs(self.moe_cfg)}
+            defs["first"] = first
+            defs["layers"] = _stack(rest, c.n_layers - c.first_dense)
+
+        elif c.family == "ssm":
+            layer = {"ln": _norm_def(e), "mamba": mamba_defs(self.mamba_cfg)}
+            defs["layers"] = _stack(layer, c.n_layers)
+
+        elif c.family == "hybrid":
+            nsb = c.n_layers // c.shared_attn_every
+            mlayer = {"ln": _norm_def(e), "mamba": mamba_defs(self.mamba_cfg)}
+            defs["blocks"] = _stack(_stack(mlayer, c.shared_attn_every), nsb)
+            defs["shared"] = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                              "attn": attn_defs(self.attn_cfg),
+                              "mlp": mlp_defs(e, c.d_ff)}
+
+        elif c.family == "encdec":
+            enc_layer = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                         "attn": attn_defs(self.attn_cfg),
+                         "mlp": mlp_defs(e, c.d_ff)}
+            dec_layer = {"ln1": _norm_def(e), "ln2": _norm_def(e),
+                         "ln3": _norm_def(e),
+                         "attn": attn_defs(self.attn_cfg),
+                         "xattn": attn_defs(self.attn_cfg),
+                         "mlp": mlp_defs(e, c.d_ff)}
+            defs["encoder"] = _stack(enc_layer, c.n_enc_layers)
+            defs["enc_norm"] = _norm_def(e)
+            defs["layers"] = _stack(dec_layer, c.n_layers)
+        else:
+            raise ValueError(c.family)
+        return defs
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_defs(), key)
+
+    def param_specs(self):
+        return specs(self.param_defs(), self.rules)
+
+    def param_shardings(self):
+        return jax.tree.map(lambda s: named_sharding(self.mesh, s),
+                            self.param_specs())
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        return self._c(x, "batch", "act_seq", None)
+
+    def _logits(self, params, x):
+        c = self.cfg
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        if c.padded_vocab != c.vocab_size:
+            mask = jnp.arange(c.padded_vocab) < c.vocab_size
+            logits = jnp.where(mask, logits, -1e30)
+        return logits
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.remat else fn
+
+    # ------------------------------------------------------- dense / generic
+    def _dense_body(self, emit_cache: bool, kind: str = "causal"):
+        def body(x, lp):
+            a, kv = attn_apply(self.attn_cfg, lp["attn"],
+                               rms_norm(x, lp["ln1"], self.cfg.norm_eps),
+                               kind=kind)
+            x = x + a
+            x = x + mlp_apply(lp["mlp"],
+                              rms_norm(x, lp["ln2"], self.cfg.norm_eps))
+            x = self._c(x, "batch", "act_seq", None)
+            return x, (kv if emit_cache else None)
+        return body
+
+    def _forward(self, params, tokens, *, prefix=None, frames=None,
+                 emit_cache: bool = False):
+        """→ (hidden (B,S,E), cache-or-None). S includes any prefix."""
+        c = self.cfg
+        x = self._embed(params, tokens)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(self.dtype), x], axis=1)
+        cache = None
+
+        if c.family == "dense":
+            body = self._maybe_remat(self._dense_body(emit_cache))
+            x, cache = lax_scan(body, x, params["layers"])
+
+        elif c.family == "moe" and not c.use_mla:     # llama4
+            def sb(x, bp):
+                caches = []
+                for j in range(c.global_every - 1):
+                    lp = jax.tree.map(lambda t: t[j], bp["local"])
+                    a, kv = attn_apply(self.attn_local, lp["attn"],
+                                       rms_norm(x, lp["ln1"], c.norm_eps))
+                    x = x + a
+                    x = x + moe_apply(self.moe_cfg, lp["moe"],
+                                      rms_norm(x, lp["ln2"], c.norm_eps),
+                                      constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                    caches.append(kv)
+                gp = bp["global"]
+                a, gkv = attn_apply(self.attn_global, gp["attn"],
+                                    rms_norm(x, gp["ln1"], c.norm_eps))
+                x = x + a
+                x = x + moe_apply(self.moe_cfg, gp["moe"],
+                                  rms_norm(x, gp["ln2"], c.norm_eps),
+                                  constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                x = self._c(x, "batch", "act_seq", None)
+                if emit_cache:
+                    loc = jax.tree.map(lambda *t: jnp.stack(t), *caches)
+                    return x, (loc, gkv)
+                return x, None
+            x, cache = lax_scan(self._maybe_remat(sb), x, params["blocks"])
+
+        elif c.family == "moe":                        # deepseek
+            fp = params["first"]
+            a, fkv = mla_apply(self.mla_cfg, fp["attn"],
+                               rms_norm(x, fp["ln1"], c.norm_eps))
+            x = x + a
+            x = x + mlp_apply(fp["mlp"], rms_norm(x, fp["ln2"], c.norm_eps))
+
+            def body(x, lp):
+                a, kv = mla_apply(self.mla_cfg, lp["attn"],
+                                  rms_norm(x, lp["ln1"], c.norm_eps))
+                x = x + a
+                x = x + moe_apply(self.moe_cfg, lp["moe"],
+                                  rms_norm(x, lp["ln2"], c.norm_eps),
+                                  constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                x = self._c(x, "batch", "act_seq", None)
+                return x, (kv if emit_cache else None)
+            x, rest = lax_scan(self._maybe_remat(body), x,
+                                   params["layers"])
+            cache = (fkv, rest)
+
+        elif c.family == "ssm":
+            def body(x, lp):
+                y, st = mamba_apply(self.mamba_cfg, lp["mamba"],
+                                    rms_norm(x, lp["ln"], c.norm_eps))
+                x = self._c(x + y, "batch", "act_seq", None)
+                return x, (st if emit_cache else None)
+            x, cache = lax_scan(self._maybe_remat(body), x,
+                                    params["layers"])
+
+        elif c.family == "hybrid":
+            shared = params["shared"]
+
+            def sb(x, bp):
+                def inner(x, lp):
+                    y, st = mamba_apply(self.mamba_cfg, lp["mamba"],
+                                        rms_norm(x, lp["ln"], c.norm_eps))
+                    return x + y, (st if emit_cache else None)
+                x, sts = lax_scan(inner, x, bp)
+                a, kv = attn_apply(self.attn_cfg, shared["attn"],
+                                   rms_norm(x, shared["ln1"], c.norm_eps))
+                x = x + a
+                x = x + mlp_apply(shared["mlp"],
+                                  rms_norm(x, shared["ln2"], c.norm_eps))
+                x = self._c(x, "batch", "act_seq", None)
+                return x, ((sts, kv) if emit_cache else None)
+            x, cache = lax_scan(self._maybe_remat(sb), x, params["blocks"])
+
+        elif c.family == "encdec":
+            enc = frames.astype(self.dtype)
+            enc_body = self._maybe_remat(self._encdec_enc_body())
+            enc, _ = lax_scan(enc_body, enc, params["encoder"])
+            enc = rms_norm(enc, params["enc_norm"], c.norm_eps)
+
+            def dec_body(x, lp):
+                a, kv = attn_apply(self.attn_cfg, lp["attn"],
+                                   rms_norm(x, lp["ln1"], c.norm_eps))
+                x = x + a
+                xa, xkv = self._cross_attn(lp["xattn"],
+                                           rms_norm(x, lp["ln2"], c.norm_eps),
+                                           enc)
+                x = x + xa
+                x = x + mlp_apply(lp["mlp"],
+                                  rms_norm(x, lp["ln3"], c.norm_eps))
+                x = self._c(x, "batch", "act_seq", None)
+                return x, ((kv, xkv) if emit_cache else None)
+            x, cache = lax_scan(self._maybe_remat(dec_body), x,
+                                    params["layers"])
+        else:
+            raise ValueError(c.family)
+
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, cache
+
+    def _encdec_enc_body(self):
+        c = self.cfg
+
+        def body(x, lp):
+            a, _ = attn_apply(self.attn_cfg, lp["attn"],
+                              rms_norm(x, lp["ln1"], c.norm_eps), kind="bidir")
+            x = x + a
+            x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], c.norm_eps))
+            return self._c(x, "batch", "act_seq", None), None
+        return body
+
+    def _cross_attn(self, p, x, enc):
+        """Cross-attention: q from x, k/v from encoder output (no RoPE)."""
+        cfgx = self.attn_cfg._replace(use_rope=False)
+        q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bse,ehd->bshd", enc, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bse,ehd->bshd", enc, p["wv"].astype(x.dtype))
+        from .common import attention
+        out = attention(q, k, v, kind="bidir")
+        y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+        return y, (k, v)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch):
+        c = self.cfg
+        kw = {}
+        if c.prefix_len:
+            kw["prefix"] = batch["prefix"]
+        if c.family == "encdec":
+            kw["frames"] = batch["frames"]
+        h, _ = self._forward(params, batch["tokens"], **kw)
+        if c.prefix_len:                  # loss only over token positions
+            h = h[:, c.prefix_len:]
+        # loss boundary: re-shard to vocab sharding (cheap: gathers h over
+        # seq) — seq-sharded logits leave the (E, V) lm-head grad partials
+        # fully replicated in f32 (observed 4.6 GiB/dev on qwen110b)
+        h = self._c(h, "batch", None, None)
+        logits = self._logits(params, h)
+        logits = self._c(logits, "batch", None, "vocab")
+        tgt = batch["targets"]
+        # CE via reductions that stay vocab-sharded (no take_along_axis
+        # gather across vocab shards — that all-gathers the logits)
+        m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(tgt, logits.shape[-1], dtype=logits.dtype)
+        onehot = self._c(onehot, "batch", None, "vocab")
+        lt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        loss = (lse - lt).mean()
+        acc = (logits.argmax(-1) == tgt).mean()
+        return loss, {"loss": loss, "acc": acc}
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch):
+        c = self.cfg
+        kw = {"emit_cache": True}
+        if c.prefix_len:
+            kw["prefix"] = batch["prefix"]
+        if c.family == "encdec":
+            kw["frames"] = batch["frames"]
+        h, cache = self._forward(params, batch["tokens"], **kw)
+        logits = self._logits(params, h[:, -1:])
+        next_tok = argmax_tournament(logits[:, 0])
+        return next_tok, cache
+
+    # ------------------------------------------------------------ decode API
+    def _cache_len(self, kind: str, cache_len: int) -> int:
+        if kind == "window":
+            return min(self.cfg.window, cache_len)
+        if kind == "chunk":
+            return min(self.cfg.chunk, cache_len)
+        return cache_len
+
+    def init_cache(self, batch: int, cache_len: int, dtype=None):
+        """Zeroed decode cache (pytree) for one-token serve steps."""
+        c = self.cfg
+        dt = dtype or self.dtype
+
+        def kv(n_layers, length, hkv, hd):
+            shp = (n_layers, batch, length, hkv, hd) if n_layers else \
+                (batch, length, hkv, hd)
+            return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+        if c.family == "dense":
+            a = self.attn_cfg
+            length = self._cache_len("window" if c.window else "full",
+                                     cache_len)
+            return kv(c.n_layers, length, a.hkv, a.head_dim)
+        if c.family == "moe" and not c.use_mla:       # llama4
+            a = self.attn_cfg
+            nsb = c.n_layers // c.global_every
+            nloc = c.global_every - 1
+            return {
+                "local": {"k": jnp.zeros((nsb, nloc, batch,
+                                          self._cache_len("chunk", cache_len),
+                                          a.hkv, a.head_dim), dt),
+                          "v": jnp.zeros((nsb, nloc, batch,
+                                          self._cache_len("chunk", cache_len),
+                                          a.hkv, a.head_dim), dt)},
+                "global": kv(nsb, cache_len, a.hkv, a.head_dim),
+            }
+        if c.family == "moe":                          # deepseek MLA latent
+            m = self.mla_cfg
+            return {
+                "first": {"ckv": jnp.zeros((batch, cache_len, m.kv_lora), dt),
+                          "kpe": jnp.zeros((batch, cache_len,
+                                            m.rope_head_dim), dt)},
+                "rest": {"ckv": jnp.zeros((c.n_layers - 1, batch, cache_len,
+                                           m.kv_lora), dt),
+                         "kpe": jnp.zeros((c.n_layers - 1, batch, cache_len,
+                                           m.rope_head_dim), dt)},
+            }
+        if c.family == "ssm":
+            m = self.mamba_cfg
+            return {
+                "conv": jnp.zeros((c.n_layers, batch, m.conv_dim,
+                                   m.conv_kernel - 1), dt),
+                "ssm": jnp.zeros((c.n_layers, batch, m.n_heads, m.head_dim,
+                                  m.d_state), jnp.float32),
+            }
+        if c.family == "hybrid":
+            m = self.mamba_cfg
+            a = self.attn_cfg
+            nsb = c.n_layers // c.shared_attn_every
+            k = c.shared_attn_every
+            return {
+                "conv": jnp.zeros((nsb, k, batch, m.conv_dim,
+                                   m.conv_kernel - 1), dt),
+                "ssm": jnp.zeros((nsb, k, batch, m.n_heads, m.head_dim,
+                                  m.d_state), jnp.float32),
+                "attn": kv(nsb, cache_len, a.hkv, a.head_dim),
+            }
+        if c.family == "encdec":
+            a = self.attn_cfg
+            enc_len = max(1, cache_len // c.enc_len_ratio)
+            out = kv(c.n_layers, cache_len, a.hkv, a.head_dim)
+            out["xk"] = jnp.zeros((c.n_layers, batch, enc_len, a.hkv,
+                                   a.head_dim), dt)
+            out["xv"] = jnp.zeros((c.n_layers, batch, enc_len, a.hkv,
+                                   a.head_dim), dt)
+            return out
+        raise ValueError(c.family)
+
+    def decode_step(self, params, cache, token, pos):
+        """token (B,1) int32, pos scalar int32 → (next_token (B,), cache')."""
+        c = self.cfg
+        x = self._embed(params, token)
+
+        if c.family == "dense":
+            def body(x, xs):
+                lp, ck, cv = xs
+                a, ck, cv = attn_decode(self.attn_cfg, lp["attn"],
+                                        rms_norm(x, lp["ln1"], c.norm_eps),
+                                        ck, cv, pos, constrain=self._c)
+                x = x + a
+                x = x + mlp_apply(lp["mlp"],
+                                  rms_norm(x, lp["ln2"], c.norm_eps))
+                return x, (ck, cv)
+            x, (ck, cv) = lax_scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = {"k": ck, "v": cv}
+
+        elif c.family == "moe" and not c.use_mla:      # llama4
+            def sb(x, xs):
+                bp, lck, lcv, gck, gcv = xs
+                lcks, lcvs = [], []
+                for j in range(c.global_every - 1):
+                    lp = jax.tree.map(lambda t: t[j], bp["local"])
+                    a, ckj, cvj = attn_decode(
+                        self.attn_local, lp["attn"],
+                        rms_norm(x, lp["ln1"], c.norm_eps),
+                        lck[j], lcv[j], pos, constrain=self._c)
+                    x = x + a
+                    x = x + moe_apply(self.moe_cfg, lp["moe"],
+                                      rms_norm(x, lp["ln2"], c.norm_eps),
+                                      constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                    lcks.append(ckj)
+                    lcvs.append(cvj)
+                gp = bp["global"]
+                a, gck, gcv = attn_decode(self.attn_global, gp["attn"],
+                                          rms_norm(x, gp["ln1"], c.norm_eps),
+                                          gck, gcv, pos, constrain=self._c)
+                x = x + a
+                x = x + moe_apply(self.moe_cfg, gp["moe"],
+                                  rms_norm(x, gp["ln2"], c.norm_eps),
+                                  constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                return x, (jnp.stack(lcks), jnp.stack(lcvs), gck, gcv)
+            x, (lck, lcv, gck, gcv) = lax_scan(
+                sb, x, (params["blocks"], cache["local"]["k"],
+                        cache["local"]["v"], cache["global"]["k"],
+                        cache["global"]["v"]))
+            cache = {"local": {"k": lck, "v": lcv},
+                     "global": {"k": gck, "v": gcv}}
+
+        elif c.family == "moe":                        # deepseek
+            fp = params["first"]
+            a, fck, fkp = mla_decode(self.mla_cfg, fp["attn"],
+                                     rms_norm(x, fp["ln1"], c.norm_eps),
+                                     cache["first"]["ckv"],
+                                     cache["first"]["kpe"], pos)
+            x = x + a
+            x = x + mlp_apply(fp["mlp"], rms_norm(x, fp["ln2"], c.norm_eps))
+
+            def body(x, xs):
+                lp, ckv, kpe = xs
+                a, ckv, kpe = mla_decode(self.mla_cfg, lp["attn"],
+                                         rms_norm(x, lp["ln1"], c.norm_eps),
+                                         ckv, kpe, pos)
+                x = x + a
+                x = x + moe_apply(self.moe_cfg, lp["moe"],
+                                  rms_norm(x, lp["ln2"], c.norm_eps),
+                                  constrain=self._c,
+                                  dp_groups=self._dp_extent)
+                return x, (ckv, kpe)
+            x, (ckv, kpe) = lax_scan(
+                body, x, (params["layers"], cache["rest"]["ckv"],
+                          cache["rest"]["kpe"]))
+            cache = {"first": {"ckv": fck, "kpe": fkp},
+                     "rest": {"ckv": ckv, "kpe": kpe}}
+
+        elif c.family == "ssm":
+            def body(x, xs):
+                lp, cs, ss = xs
+                y, cs, ss = mamba_decode(self.mamba_cfg, lp["mamba"],
+                                         rms_norm(x, lp["ln"], c.norm_eps),
+                                         cs, ss)
+                return x + y, (cs, ss)
+            x, (cs, ss) = lax_scan(
+                body, x, (params["layers"], cache["conv"], cache["ssm"]))
+            cache = {"conv": cs, "ssm": ss}
+
+        elif c.family == "hybrid":
+            shared = params["shared"]
+
+            def sb(x, xs):
+                bp, cs, ss, ck, cv = xs
+                def inner(x, ys):
+                    lp, csj, ssj = ys
+                    y, csj, ssj = mamba_decode(
+                        self.mamba_cfg, lp["mamba"],
+                        rms_norm(x, lp["ln"], c.norm_eps), csj, ssj)
+                    return x + y, (csj, ssj)
+                x, (cs, ss) = lax_scan(inner, x, (bp, cs, ss))
+                a, ck, cv = attn_decode(self.attn_cfg, shared["attn"],
+                                        rms_norm(x, shared["ln1"], c.norm_eps),
+                                        ck, cv, pos, constrain=self._c)
+                x = x + a
+                x = x + mlp_apply(shared["mlp"],
+                                  rms_norm(x, shared["ln2"], c.norm_eps))
+                return x, (cs, ss, ck, cv)
+            x, (cs, ss, ck, cv) = lax_scan(
+                sb, x, (params["blocks"], cache["conv"], cache["ssm"],
+                        cache["attn"]["k"], cache["attn"]["v"]))
+            cache = {"conv": cs, "ssm": ss, "attn": {"k": ck, "v": cv}}
+
+        elif c.family == "encdec":
+            def body(x, xs):
+                lp, ck, cv, xk, xv = xs
+                a, ck, cv = attn_decode(self.attn_cfg, lp["attn"],
+                                        rms_norm(x, lp["ln1"], c.norm_eps),
+                                        ck, cv, pos, constrain=self._c)
+                x = x + a
+                h = rms_norm(x, lp["ln2"], c.norm_eps)
+                q = jnp.einsum("bse,ehd->bshd", h,
+                               lp["xattn"]["wq"].astype(h.dtype))
+                from .common import attention
+                out = attention(q, xk, xv, kind="bidir")
+                xa = jnp.einsum("bshd,hde->bse", out,
+                                lp["xattn"]["wo"].astype(h.dtype))
+                x = x + xa
+                x = x + mlp_apply(lp["mlp"],
+                                  rms_norm(x, lp["ln3"], c.norm_eps))
+                return x, (ck, cv)
+            x, (ck, cv) = lax_scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"]))
+            cache = {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+        else:
+            raise ValueError(c.family)
+
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = self._logits(params, x)
+        next_tok = argmax_tournament(logits[:, 0])    # no softmax (paper)
+        return next_tok, cache
+
+    # ---------------------------------------------------------- dry-run I/O
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        c = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            out = {"tokens": sd((b, s), i32), "targets": sd((b, s), i32)}
+            if c.prefix_len:
+                out["prefix"] = sd((b, c.prefix_len, c.d_model), self.dtype)
+            if c.family == "encdec":
+                out["frames"] = sd((b, s // c.enc_len_ratio, c.d_model),
+                                   self.dtype)
+            return out
+        if shape.kind == "prefill":
+            out = {"tokens": sd((b, s), i32)}
+            if c.prefix_len:
+                out["prefix"] = sd((b, c.prefix_len, c.d_model), self.dtype)
+            if c.family == "encdec":
+                out["frames"] = sd((b, s // c.enc_len_ratio, c.d_model),
+                                   self.dtype)
+            return out
+        # decode: one new token against a cache of length seq_len
+        cache = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {"token": sd((b, 1), i32), "pos": sd((), i32), "cache": cache}
+
+    # sharding trees matching input_specs
+    def input_shardings(self, shape: ShapeSpec):
+        if self.mesh is None:
+            return None
+        c = self.cfg
+        bspec = batch_axes(self.rules, shape.global_batch, self.mesh)
+        ns = lambda *axes: named_sharding(self.mesh, P(*axes))  # noqa: E731
+
+        if shape.kind in ("train", "prefill"):
+            out = {"tokens": ns(bspec, None)}
+            if shape.kind == "train":
+                out["targets"] = ns(bspec, None)
+            if c.prefix_len:
+                out["prefix"] = ns(bspec, None, None)
+            if c.family == "encdec":
+                out["frames"] = ns(bspec, None, None)
+            return out
+
+        def kv_spec(tree):
+            """Decode-cache sharding.
+
+            Layout convention: (..layer dims.., B, S, [H, D]).  Rules:
+            - batch over dp when divisible;
+            - heads over `model` when divisible (keeps attention local);
+            - else the cache-length dim over `model` (softmax stats reduce);
+            - batch-unshardable cells (long_500k B=1) shard the length dim
+              over `data` too.
+            NEVER shard head_dim: RoPE halves it (forces GSPMD full
+            rematerialization — observed 40 GiB/dev on qwen4b decode).
+            """
+            tpn = self.mesh.shape.get("model", 1)
+            dp = self.rules.get("batch")
+            dp_names = ((dp,) if isinstance(dp, str) else tuple(dp or ()))
+            dpn = 1
+            for nme in dp_names:
+                dpn *= self.mesh.shape[nme]
+
+            def one(x):
+                shp = x.shape
+                nd = len(shp)
+                spec = [None] * nd
+                try:
+                    bdim = shp.index(shape.global_batch)
+                except ValueError:
+                    return named_sharding(self.mesh, P(*spec))
+                if bspec is not None:
+                    spec[bdim] = bspec
+                sdim = bdim + 1 if nd > bdim + 1 else None
+                hdim = bdim + 2 if nd >= bdim + 4 else None
+                if hdim is not None and shp[hdim] % tpn == 0:
+                    spec[hdim] = "model"
+                elif sdim is not None and shp[sdim] >= 1024 and \
+                        shp[sdim] % tpn == 0:
+                    spec[sdim] = "model"
+                if bspec is None and sdim is not None and \
+                        shp[sdim] >= 1024 and shp[sdim] % dpn == 0 and \
+                        spec[sdim] is None and dp is not None:
+                    spec[sdim] = dp
+                return named_sharding(self.mesh, P(*spec))
+            return jax.tree.map(one, tree)
+
+        cache = jax.eval_shape(lambda: self.init_cache(shape.global_batch,
+                                                       shape.seq_len))
+        return {"token": ns(bspec, None), "pos": ns(),
+                "cache": kv_spec(cache)}

@@ -1,0 +1,70 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Pure JAX (no optax in the container).  Optimizer state is a pytree shaped
+like the params, so it inherits the params' shardings (ZeRO-3-style: FSDP
+shards both).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.zeros_like, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params,
+                 lr: jax.Array):
+    """→ (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+
+    def step(p, m, v):
+        update = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        return (p.astype(jnp.float32)
+                - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(step, params, mu, nu)
+    return new_params, OptState(mu=mu, nu=nu, count=count), \
+        {"grad_norm": gnorm}

@@ -1,0 +1,16 @@
+"""LR schedules (cosine with linear warmup)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup"]
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(1, warmup)
+    t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,153 @@
+"""Roofline analysis from compiled dry-run artifacts (brief §ROOFLINE).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-device:
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis()`` reports per-device (post-GSPMD) FLOPs/bytes but counts
+while-loop bodies once; callers therefore lower at 1 and 2 layer-units with
+scans unrolled and extrapolate (see launch/dryrun.py).  Collective bytes
+are parsed from the compiled HLO text (sum of result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 per chip (TPU v5e-ish)
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?\S+\s*=\s*)?"
+    r"((?:\([^)]*\))|(?:\S+?\[[\d,]*\]\S*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind from HLO text."""
+    out: dict[str, int] = {}
+    for shape_str, kind in _COLL_RE.findall(hlo_text):
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HW = HW()) -> dict:
+    t_c = flops_per_dev / hw.peak_flops
+    t_m = bytes_per_dev / hw.hbm_bw
+    t_n = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_n)
+    return {**terms, "bottleneck": dom.replace("_s", ""),
+            "roofline_fraction": (t_c / bound) if bound else 0.0,
+            "step_lower_bound_s": bound}
+
+
+def n_params_active(cfg) -> tuple[float, float]:
+    """(total params, active-per-token params) — analytic, from config."""
+    c = cfg
+    e = c.d_model
+    emb = c.padded_vocab * e * (1 if c.tie_embeddings else 2)
+
+    def attn_params():
+        if c.use_mla:
+            qk = c.nope_head_dim + c.rope_head_dim
+            return (e * c.q_lora + c.q_lora * c.n_heads * qk
+                    + e * c.kv_lora + e * c.rope_head_dim
+                    + c.kv_lora * c.n_heads * (c.nope_head_dim
+                                               + c.v_head_dim)
+                    + c.n_heads * c.v_head_dim * e)
+        hd = c.head_dim
+        return e * hd * (c.n_heads * 2 + c.n_kv_heads * 2)
+
+    def mlp_params(ff):
+        return 3 * e * ff
+
+    if c.family == "dense":
+        layer = attn_params() + mlp_params(c.d_ff)
+        total = emb + c.n_layers * layer
+        return total, total
+    if c.family == "moe":
+        expert = mlp_params(c.moe_d_ff)
+        shared = mlp_params(c.shared_d_ff) if c.n_shared_experts else 0
+        router = e * c.n_experts
+        n_moe = c.n_layers - c.first_dense
+        moe_all = n_moe * (attn_params() + router + shared
+                           + c.n_experts * expert)
+        moe_act = n_moe * (attn_params() + router + shared
+                           + c.top_k * expert)
+        dense = c.first_dense * (attn_params() + mlp_params(c.d_ff))
+        return emb + dense + moe_all, emb + dense + moe_act
+    if c.family == "ssm":
+        di = c.ssm_expand * e
+        nh = di // c.ssm_head_dim
+        layer = (e * (2 * di + 2 * c.ssm_state + nh)
+                 + (di + 2 * c.ssm_state) * c.conv_kernel + di * e)
+        total = emb + c.n_layers * layer
+        return total, total
+    if c.family == "hybrid":
+        di = c.ssm_expand * e
+        nh = di // c.ssm_head_dim
+        mlayer = (e * (2 * di + 2 * c.ssm_state + nh)
+                  + (di + 2 * c.ssm_state) * c.conv_kernel + di * e)
+        shared = attn_params() + mlp_params(c.d_ff)
+        total = emb + c.n_layers * mlayer + shared
+        # shared block applied n_layers/every times — active FLOPs count all
+        act = emb + c.n_layers * mlayer \
+            + (c.n_layers // c.shared_attn_every) * shared
+        return total, act
+    if c.family == "encdec":
+        enc = c.n_enc_layers * (attn_params() + mlp_params(c.d_ff))
+        dec = c.n_layers * (2 * attn_params() + mlp_params(c.d_ff))
+        total = emb + enc + dec
+        return total, total
+    raise ValueError(c.family)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the brief: 6·N·D (train) / 2·N·D (fwd-only), with
+    N = active params (MoE) and D = tokens processed in the step.
+    Attention score FLOPs deliberately excluded (standard 6ND convention)."""
+    _, act = n_params_active(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * act * tokens
+    # decode: one token per sequence
+    return 2.0 * act * shape.global_batch

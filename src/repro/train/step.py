@@ -1,0 +1,94 @@
+"""Train-step factory: loss → grads (w/ microbatch accumulation) → AdamW.
+
+The returned ``train_step(state, batch)`` is the function the dry-run
+lowers on the production mesh.  Microbatching is a ``lax.scan`` over
+gradient accumulation slices (keeps activation memory ∝ 1/n_micro while
+the collective schedule still overlaps per-slice backward with the next
+slice's forward under GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import scan as lax_scan
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup
+
+__all__ = ["TrainState", "TrainHParams", "init_train_state",
+           "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    n_micro: int = 1
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(loss_fn: Callable, hp: TrainHParams, constrain=None):
+    """loss_fn(params, batch) → (loss, metrics).
+
+    ``constrain(x, *logical_axes)``: sharding hook.  The microbatch reshape
+    (B,) → (n_micro, B/n_micro) must re-pin the batch sharding to the
+    second dim — GSPMD otherwise splits the dp axis across (micro, batch)
+    and every activation downstream is under-sharded (observed: 4.6 GiB
+    replicated one-hots on qwen110b)."""
+    if constrain is None:
+        constrain = lambda t, *a: t  # noqa: E731
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        if hp.n_micro > 1:
+            micro = jax.tree.map(
+                lambda x: constrain(
+                    x.reshape(hp.n_micro, x.shape[0] // hp.n_micro,
+                              *x.shape[1:]),
+                    None, "batch", *([None] * (x.ndim - 1))), batch)
+
+            def accum(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(state.params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        jax.tree.map(jnp.add, m_acc, m)), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "acc": jnp.zeros((), jnp.float32)}
+            (g_sum, m_sum), _ = lax_scan(accum, (zeros_g, zeros_m), micro)
+            grads = jax.tree.map(lambda g: g / hp.n_micro, g_sum)
+            metrics = jax.tree.map(lambda m: m / hp.n_micro, m_sum)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+
+        lr = cosine_warmup(state.step, peak_lr=hp.peak_lr, warmup=hp.warmup,
+                           total=hp.total_steps)
+        params, opt, opt_metrics = adamw_update(hp.adamw, grads, state.opt,
+                                                state.params, lr)
+        metrics = {**metrics, **opt_metrics, "lr": lr}
+        return TrainState(params=params, opt=opt, step=state.step + 1), \
+            metrics
+
+    return train_step

@@ -1,0 +1,57 @@
+"""BNN (paper Fig. 1(b) + §V): STE training + time-domain sign activation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bnn import (BNNConfig, binarize_ste, bnn_apply, bnn_loss,
+                            init_bnn, time_domain_sign)
+from repro.core.time_domain import PDLConfig, make_device
+
+
+def _toy_data(n=256, d=32, classes=4, seed=0):
+    rng = np.random.default_rng(seed)
+    protos = rng.choice([-1.0, 1.0], (classes, d))
+    y = rng.integers(0, classes, n)
+    flip = rng.random((n, d)) < 0.08
+    x = protos[y] * np.where(flip, -1.0, 1.0)
+    return jnp.asarray(x.astype(np.float32)), jnp.asarray(y.astype(np.int32))
+
+
+def test_binarize_ste_grad():
+    g = jax.grad(lambda w: binarize_ste(w).sum())(jnp.asarray([0.5, -2.0]))
+    assert g.tolist() == [1.0, 0.0]   # clipped identity
+
+
+def test_bnn_trains():
+    x, y = _toy_data()
+    cfg = BNNConfig(in_features=32, hidden=(64,), n_classes=4)
+    params = init_bnn(cfg, jax.random.key(0))
+    lr = 0.05
+    loss0 = float(bnn_loss(cfg, params, x, y))
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(lambda q: bnn_loss(cfg, q, x, y))(p)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
+
+    for _ in range(60):
+        params, loss = step(params)
+    acc = float(jnp.mean((bnn_apply(cfg, params, x).argmax(-1) == y)))
+    assert float(loss) < loss0
+    assert acc > 0.9, acc
+
+
+def test_time_domain_sign_matches_threshold():
+    """Neuron PDL vs neutral line == sign(matches − n/2) (paper §V)."""
+    pdl = PDLConfig(sigma_elem=0.5, sigma_noise=0.1)
+    b, nn_, n = 8, 6, 64
+    rng = np.random.default_rng(1)
+    match = jnp.asarray(rng.integers(0, 2, (b, nn_, n), dtype=np.int8))
+    dev = make_device(pdl, nn_ + 1, n, jax.random.key(2))
+    got = np.asarray(time_domain_sign(pdl, dev, match))
+    counts = np.asarray(match).sum(-1)
+    want = np.where(counts > n // 2, 1.0, -1.0)
+    # ties (== n/2) are metastable-adjacent; exclude them
+    clear = counts != n // 2
+    assert (got[clear] == want[clear]).all()

@@ -1,0 +1,75 @@
+"""Spec compliance: every assigned architecture matches the brief's table."""
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+
+# (name, family, L, d_model, heads, kv, d_ff, vocab, extras)
+ASSIGNED = {
+    "llama4-scout-17b-a16e": ("moe", 48, 5120, 40, 8, None, 202048,
+                              dict(n_experts=16, top_k=1, moe_d_ff=8192)),
+    "deepseek-v2-236b": ("moe", 60, 5120, 128, 128, None, 102400,
+                         dict(n_experts=160, top_k=6, moe_d_ff=1536,
+                              use_mla=True, kv_lora=512,
+                              n_shared_experts=2)),
+    "zamba2-2.7b": ("hybrid", 54, 2560, 32, 32, 10240, 32000,
+                    dict(ssm_state=64)),
+    "seamless-m4t-large-v2": ("encdec", 24, 1024, 16, 16, 8192, 256206,
+                              dict(n_enc_layers=24)),
+    "internvl2-26b": ("dense", 48, 6144, 48, 8, 16384, 92553, {}),
+    "qwen1.5-110b": ("dense", 80, 8192, 64, 8, 49152, 152064,
+                     dict(qkv_bias=True)),
+    "starcoder2-7b": ("dense", 32, 4608, 36, 4, 18432, 49152, {}),
+    "qwen1.5-4b": ("dense", 40, 2560, 20, 20, 6912, 151936,
+                   dict(qkv_bias=True)),
+    "tinyllama-1.1b": ("dense", 22, 2048, 32, 4, 5632, 32000, {}),
+    "mamba2-130m": ("ssm", 24, 768, 0, 0, None, 50280,
+                    dict(ssm_state=128)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_config_matches_brief(name):
+    fam, nl, dm, h, kv, ff, vocab, extras = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.family == fam
+    assert cfg.n_layers == nl
+    assert cfg.d_model == dm
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    for k, v in extras.items():
+        assert getattr(cfg, k) == v, (k, getattr(cfg, k), v)
+    # padded vocab must be TP-divisible
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= vocab
+
+
+def test_assigned_shapes_match_brief():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["decode_32k"].kind == "decode"     # lowers serve_step
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_long_500k_eligibility():
+    """long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    runs = {n for n in ASSIGNED if get_config(n).supports_long}
+    assert runs == {"mamba2-130m", "zamba2-2.7b", "starcoder2-7b",
+                    "llama4-scout-17b-a16e"}
+    for n in runs:
+        cfg = get_config(n)
+        assert cfg.family in ("ssm", "hybrid") or cfg.window or cfg.chunk
+
+
+def test_paper_tm_configs_registered():
+    for n in ("tm-iris-10", "tm-iris-50", "tm-mnist-50", "tm-mnist-100",
+              "bnn-mnist"):
+        assert get_config(n).family == "tm"

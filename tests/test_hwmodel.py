@@ -1,0 +1,103 @@
+"""FPGA cost model: calibrated against the paper's reported endpoints."""
+
+import math
+
+import pytest
+
+from repro.core.hwmodel import (HWConstants, TMShape, cost, paper_models,
+                                popcount_only_power)
+
+K = HWConstants()
+MODELS = {m.name: m for m in paper_models()}
+
+
+def ratio(metric, name, impl="timedomain", base="generic", activity=0.25):
+    a = cost(impl, MODELS[name], K, activity)[metric]
+    b = cost(base, MODELS[name], K, activity)[metric]
+    return a / b
+
+
+def test_headline_latency_reduction():
+    """Paper: up to 38% lower latency (MNIST-50 case)."""
+    assert ratio("latency_ns", "mnist-50") == pytest.approx(0.62, abs=0.05)
+    assert ratio("latency_ns", "mnist-100") < 1.0
+
+
+def test_iris_latency_higher():
+    """Paper §IV-C1: TD has higher latency for the small Iris models."""
+    assert ratio("latency_ns", "iris-10") > 0.99
+    assert ratio("latency_ns", "iris-50") > 1.2
+
+
+def test_headline_power_reduction():
+    """Paper: up to 43.1% lower dynamic power (MNIST)."""
+    best = min(ratio("power", n) for n in ("mnist-50", "mnist-100"))
+    assert best == pytest.approx(0.569, abs=0.06)
+
+
+def test_headline_resource_reduction():
+    """Paper: up to 15% fewer resources; TD smallest everywhere except
+    the 10-clause Iris model."""
+    best = min(ratio("resources", n)
+               for n in ("iris-50", "mnist-50", "mnist-100"))
+    assert 0.80 <= best <= 0.90
+    assert ratio("resources", "iris-10") > 1.0
+    for n in ("iris-50", "mnist-50", "mnist-100"):
+        td = cost("timedomain", MODELS[n], K)["resources"]
+        for impl in ("generic", "fpt18", "async21"):
+            assert td < cost(impl, MODELS[n], K)["resources"]
+
+
+def test_latency_scaling_shapes_fig10():
+    """Adder tree ~ log(M); FPT'18 and TD ~ linear in M; TD argmax ~ const
+    in classes while adder argmax ~ linear (paper Fig. 10)."""
+    ms = [32, 64, 128, 256, 512]
+    tree = [cost("generic", TMShape(6, m, 784))["popcount_ns"] for m in ms]
+    fpt = [cost("fpt18", TMShape(6, m, 784))["popcount_ns"] for m in ms]
+    td = [cost("timedomain", TMShape(6, m, 784))["popcount_ns"] for m in ms]
+    # doubling M adds a constant to the tree (log), multiplies linear designs
+    tree_deltas = [b - a for a, b in zip(tree, tree[1:])]
+    assert max(tree_deltas) - min(tree_deltas) < 1e-6
+    for series in (fpt, td):
+        ratios = [b / a for a, b in zip(series, series[1:])]
+        assert all(r > 1.7 for r in ratios)
+    # FPT'18 per-bit slope slightly smaller than TD average (paper §IV-C1)
+    assert (fpt[-1] - fpt[0]) / (ms[-1] - ms[0]) < \
+        (td[-1] - td[0]) / (ms[-1] - ms[0])
+
+    cs = [2, 4, 8, 16, 32]
+    add_cmp = [cost("generic", TMShape(c, 100, 784))["compare_ns"] for c in cs]
+    td_cmp = [cost("timedomain", TMShape(c, 100, 784))["compare_ns"]
+              for c in cs]
+    assert add_cmp[-1] / add_cmp[0] > 20          # ~linear growth
+    assert td_cmp[-1] / td_cmp[0] <= 6            # ~log growth, tiny consts
+    assert td_cmp[-1] < add_cmp[-1] / 50
+
+
+def test_power_vs_activity_fig12():
+    """α=0.1: adder popcount cheaper than TD; α=0.5: TD cheapest."""
+    sh = TMShape(6, 100, 784, included_literals=30)
+    lo = {i: popcount_only_power(i, sh, K, 0.1)
+          for i in ("generic", "fpt18", "timedomain")}
+    hi = {i: popcount_only_power(i, sh, K, 0.5)
+          for i in ("generic", "fpt18", "timedomain")}
+    assert lo["timedomain"] > lo["generic"] and lo["timedomain"] > lo["fpt18"]
+    assert hi["timedomain"] < hi["generic"] and hi["timedomain"] <= hi["fpt18"]
+    # TD power ~ activity-insensitive
+    assert abs(hi["timedomain"] - lo["timedomain"]) < 1e-9
+
+
+def test_fpt18_latency_worse_than_tree():
+    """Paper §II-A: FPT'18 saves resources but increases latency."""
+    for n in ("mnist-50", "mnist-100"):
+        assert cost("fpt18", MODELS[n], K)["latency_ns"] > \
+            cost("generic", MODELS[n], K)["latency_ns"]
+        assert cost("fpt18", MODELS[n], K)["luts"] < \
+            cost("generic", MODELS[n], K)["luts"]
+
+
+def test_async21_resource_overhead():
+    """Paper Fig. 9(b): dual-rail async popcount costs the most resources."""
+    for n in MODELS:
+        assert cost("async21", MODELS[n], K)["resources"] > \
+            cost("generic", MODELS[n], K)["resources"]

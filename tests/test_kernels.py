@@ -1,0 +1,89 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.clause_eval import make_vote_matrix
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("r,w", [(1, 1), (3, 5), (8, 128), (17, 33),
+                                 (65, 128), (128, 256)])
+def test_popcount_kernel(r, w):
+    words = jnp.asarray(RNG.integers(0, 2**32, (r, w), dtype=np.uint32))
+    np.testing.assert_array_equal(np.asarray(ops.popcount_words(words)),
+                                  np.asarray(ref.ref_popcount_words(words)))
+
+
+@pytest.mark.parametrize("b,c,m,l", [
+    (1, 2, 2, 4), (4, 3, 10, 24), (17, 10, 50, 1568), (130, 6, 100, 200),
+    (2, 16, 8, 64),
+])
+@pytest.mark.parametrize("density", [0.02, 0.3])
+def test_clause_votes_kernel(b, c, m, l, density):
+    lit = jnp.asarray(RNG.integers(0, 2, (b, l), dtype=np.int8))
+    inc = jnp.asarray((RNG.random((c * m, l)) < density).astype(np.int8))
+    vm = make_vote_matrix(c, m)
+    got = ops.tm_fused_votes(lit, inc, vm)
+    want = ref.ref_clause_votes(lit, inc, vm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_votes_matches_tm_oracle():
+    """Fused kernel == repro.core.tm reference inference, end to end."""
+    from repro.core.tm import (TMConfig, class_sums, clause_outputs, init_tm)
+    cfg = TMConfig(n_classes=5, n_clauses=20, n_features=30)
+    st = init_tm(cfg, jax.random.key(0))
+    # random include masks (post-"training")
+    ta = jax.random.randint(jax.random.key(1), st.ta.shape, 1,
+                            2 * cfg.n_states + 1)
+    st = st._replace(ta=ta)
+    lit = jnp.asarray(RNG.integers(0, 2, (9, 2 * cfg.n_features),
+                                   dtype=np.int8))
+    votes_ref = class_sums(cfg, clause_outputs(cfg, st, lit))
+    inc = (ta > cfg.n_states).astype(jnp.int8).reshape(
+        cfg.n_classes * cfg.n_clauses, -1)
+    vm = make_vote_matrix(cfg.n_classes, cfg.n_clauses)
+    votes_kernel = ops.tm_fused_votes(lit, inc, vm)
+    np.testing.assert_array_equal(np.asarray(votes_kernel),
+                                  np.asarray(votes_ref))
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 33, 5), (128, 128, 128),
+                                   (200, 300, 100), (64, 1024, 16)])
+def test_binary_matmul_kernel(m, k, n):
+    x = jnp.asarray(RNG.choice([-1, 1], (m, k)).astype(np.int8))
+    w = jnp.asarray(RNG.choice([-1, 1], (k, n)).astype(np.int8))
+    np.testing.assert_array_equal(
+        np.asarray(ops.xnor_popcount_matmul(x, w)),
+        np.asarray(ref.ref_binary_matmul(x, w)))
+
+
+def test_binary_matmul_equals_xnor_popcount():
+    """±1 GEMM == 2·popcount(xnor) − K on the bit encoding (paper Fig 1b)."""
+    k = 96
+    xb = RNG.integers(0, 2, (5, k))
+    wb = RNG.integers(0, 2, (k, 7))
+    x = jnp.asarray((2 * xb - 1).astype(np.int8))
+    w = jnp.asarray((2 * wb - 1).astype(np.int8))
+    got = np.asarray(ops.xnor_popcount_matmul(x, w))
+    xnor_pop = (xb[:, :, None] == wb[None, :, :]).sum(1)
+    np.testing.assert_array_equal(got, 2 * xnor_pop - k)
+
+
+@pytest.mark.parametrize("b,c,m", [(1, 2, 3), (3, 3, 10), (16, 10, 100),
+                                   (9, 5, 37)])
+def test_pdl_race_kernel(b, c, m):
+    sel = jnp.asarray(RNG.integers(0, 2, (b, c, m), dtype=np.int8))
+    ed = jnp.asarray(RNG.normal([[[384.5, 617.6]]], 5.0,
+                                (c, m, 2)).astype(np.float32))
+    skew = jnp.asarray(RNG.normal(0, 1, (c,)).astype(np.float32))
+    w1, l1, m1 = ops.pdl_race_sim(sel, ed, skew, 10.0)
+    w2, l2, m2 = ref.ref_pdl_race(sel, ed, skew, 10.0)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

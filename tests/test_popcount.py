@@ -1,0 +1,58 @@
+"""Popcount algorithm zoo: all variants bit-exact equal (property-based)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.popcount import (argmax_tournament, pack_bits,
+                                 popcount_adder_tree, popcount_matmul,
+                                 popcount_sum, popcount_swar, unpack_bits,
+                                 signed_vote_count)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 1), min_size=1, max_size=200),
+                min_size=1, max_size=8).filter(
+    lambda rows: len({len(r) for r in rows}) == 1))
+def test_popcount_variants_agree(rows):
+    bits = jnp.asarray(np.array(rows, np.int8))
+    ref = np.asarray(popcount_sum(bits))
+    assert (np.asarray(popcount_adder_tree(bits)) == ref).all()
+    assert (np.asarray(popcount_matmul(bits)) == ref).all()
+    assert (np.asarray(popcount_swar(pack_bits(bits))) == ref).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=300))
+def test_pack_unpack_roundtrip(bits):
+    b = jnp.asarray(np.array(bits, np.int8))
+    assert (np.asarray(unpack_bits(pack_bits(b), len(bits))) ==
+            np.array(bits)).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=128))
+def test_popcount_permutation_invariant(bits):
+    """Hamming weight (not bit positions) determines the count — the
+    property separating popcount from a PUF (paper §II-B)."""
+    rng = np.random.default_rng(0)
+    b = np.array(bits, np.int8)
+    perm = rng.permutation(len(b))
+    assert int(popcount_sum(jnp.asarray(b))) == \
+        int(popcount_sum(jnp.asarray(b[perm])))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=64))
+def test_argmax_tournament_matches_jnp(scores):
+    s = jnp.asarray(np.array(scores, np.int32))
+    assert int(argmax_tournament(s)) == int(jnp.argmax(s))
+
+
+def test_signed_vote_count():
+    bits = jnp.asarray([[1, 1, 0, 1], [0, 0, 0, 0]], jnp.int8)
+    pol = jnp.asarray([1, -1, 1, -1])
+    out = np.asarray(signed_vote_count(bits, pol[None]))
+    assert out.tolist() == [1 - 1 + 0 - 1, 0]

@@ -1,0 +1,68 @@
+"""Roofline machinery: HLO collective parser, term math, analytic FLOPs."""
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import (HW, collective_bytes, model_flops,
+                                     n_params_active, roofline_terms)
+
+HLO_SAMPLE = """
+HloModule jit_step
+  %ag = bf16[16,512,256]{2,1,0} all-gather(%p0), replica_groups=...
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%sum
+  %rs = (f32[8,64]{1,0}, f32[8,64]{1,0}) reduce-scatter(%a, %b)
+  %cp = u8[32]{0} collective-permute(%y)
+  %dot = bf16[16,16]{1,0} dot(%q, %k)
+  %a2a = s32[4,4]{1,0} all-to-all(%z)
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 512 * 256 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 2 * 8 * 64 * 4
+    assert out["collective-permute"] == 32
+    assert out["all-to-all"] == 16 * 4
+    assert "dot" not in out
+
+
+def test_roofline_terms_math():
+    hw = HW()
+    t = roofline_terms(197e12, 819e9, 50e9, hw)   # 1 s per term exactly
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t = roofline_terms(197e12, 0.0, 0.0, hw)
+    assert t["bottleneck"] == "compute"
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    t = roofline_terms(1e12, 819e9, 0.0, hw)
+    assert t["bottleneck"] == "memory"
+    assert t["roofline_fraction"] < 0.01
+
+
+def test_param_counts_sane():
+    # dense: analytic count ≈ nameplate size
+    total, active = n_params_active(get_config("tinyllama-1.1b"))
+    assert total == active
+    assert 0.9e9 < total < 1.4e9
+    total, _ = n_params_active(get_config("qwen1.5-110b"))
+    assert 100e9 < total < 125e9
+    # MoE: active ≪ total
+    total, active = n_params_active(get_config("deepseek-v2-236b"))
+    assert 200e9 < total < 260e9
+    assert 18e9 < active < 32e9          # paper: 21B activated
+    total, active = n_params_active(get_config("llama4-scout-17b-a16e"))
+    assert 80e9 < total < 130e9
+    assert 12e9 < active < 22e9          # 17B activated
+
+
+def test_model_flops_scaling():
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    _, act = n_params_active(cfg)
+    assert tr == pytest.approx(6 * act * 256 * 4096)
+    assert pf == pytest.approx(2 * act * 32 * 32768)
+    assert dc == pytest.approx(2 * act * 128)

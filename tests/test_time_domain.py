@@ -1,0 +1,124 @@
+"""Time-domain popcount simulator: the paper's functional claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.popcount import argmax_tournament, signed_vote_count
+from repro.core.time_domain import (PDLConfig, PDLDevice, async_latency,
+                                    make_device, pdl_delays, race,
+                                    spearman_rho, time_domain_argmax)
+from repro.core.tm import clause_polarity
+
+RNG = np.random.default_rng(7)
+
+
+def _device(cfg, c, m, key=0, skew=0.0):
+    return make_device(cfg, c, m, jax.random.key(key), skew_ps=skew)
+
+
+def test_delay_monotone_in_hamming_weight():
+    """Paper Fig. 6: delay strictly decreasing in Hamming weight (ideal)."""
+    cfg = PDLConfig(sigma_elem=0.0, sigma_noise=0.0)
+    m = 150
+    dev = PDLDevice(elem_offset=jnp.zeros((1, m, 2)), skew=jnp.zeros((1,)))
+    pol = jnp.ones((m,), jnp.int32)
+    weights = np.arange(m + 1)
+    bits = np.zeros((m + 1, 1, m), np.int8)
+    for i, w in enumerate(weights):
+        bits[i, 0, :w] = 1
+    d = np.asarray(pdl_delays(cfg, dev, jnp.asarray(bits), pol))[:, 0]
+    assert (np.diff(d) < 0).all()
+    assert spearman_rho(weights, d) == pytest.approx(-1.0)
+
+
+def test_monotonicity_under_variation_fig6():
+    """With process variation, ρ ≈ −1 and larger Δ strengthens it."""
+    m = 150
+    rhos = {}
+    for name, (low, high) in {"d60ps": (0.5, 0.56), "d600ps": (0.38, 0.98)}.items():
+        cfg = PDLConfig(d_low=low * 1000, d_high=high * 1000,
+                        sigma_elem=12.0, sigma_noise=4.0)
+        dev = _device(cfg, 1, m, key=3)
+        pol = jnp.ones((m,), jnp.int32)
+        weights = np.arange(0, m + 1, 5)
+        bits = np.zeros((len(weights), 1, m), np.int8)
+        rng = np.random.default_rng(0)
+        for i, w in enumerate(weights):
+            idx = rng.choice(m, w, replace=False)
+            bits[i, 0, idx] = 1
+        d = np.asarray(pdl_delays(cfg, dev, jnp.asarray(bits), pol,
+                                  key=jax.random.key(1)))[:, 0]
+        rhos[name] = spearman_rho(weights, d)
+    assert rhos["d60ps"] < -0.95
+    assert rhos["d600ps"] < rhos["d60ps"] + 0.02  # larger Δ at least as good
+
+
+def test_race_matches_exact_argmax_with_adequate_delta():
+    """Lossless classification when Δ ≫ variation (paper §III-B4)."""
+    cfg = PDLConfig(sigma_elem=2.0, sigma_noise=0.5)
+    b, c, m = 64, 10, 100
+    bits = jnp.asarray(RNG.integers(0, 2, (b, c, m), dtype=np.int8))
+    pol = clause_polarity(m)
+    dev = _device(cfg, c, m, key=5)
+    res = time_domain_argmax(cfg, dev, bits, pol)
+    votes = signed_vote_count(bits, pol[None, None])
+    exact = argmax_tournament(votes)
+    # races whose top-2 votes tie are legitimately ambiguous — exclude
+    top2 = -jax.lax.top_k(-(-votes), 2)[0]  # two largest
+    clear = np.asarray(top2[:, 0] != top2[:, 1])
+    agree = np.asarray(res.winner == exact)
+    assert agree[clear].all()
+
+
+def test_skew_breaks_classification():
+    """Placement skew ⇒ broken argmax — why the paper's flow exists."""
+    cfg = PDLConfig(sigma_elem=2.0, sigma_noise=0.5)
+    b, c, m = 64, 10, 100
+    bits = jnp.asarray(RNG.integers(0, 2, (b, c, m), dtype=np.int8))
+    pol = clause_polarity(m)
+    votes = signed_vote_count(bits, pol[None, None])
+    exact = argmax_tournament(votes)
+    bad = _device(cfg, c, m, key=5, skew=2000.0)  # 2 ns skew
+    res = time_domain_argmax(cfg, bad, bits, pol)
+    assert float(np.mean(np.asarray(res.winner == exact))) < 0.9
+
+
+def test_metastability_flag_on_near_ties():
+    cfg = PDLConfig(sigma_elem=0.0, sigma_noise=0.0, t_res=10.0)
+    delays = jnp.asarray([[100.0, 105.0, 400.0],    # 5 ps gap < t_res
+                          [100.0, 400.0, 800.0]])
+    res = race(cfg, delays)
+    assert bool(res.metastable[0]) and not bool(res.metastable[1])
+    assert res.winner.tolist() == [0, 0]
+
+
+def test_async_latency_data_dependent():
+    """Higher winning vote count ⇒ earlier completion (paper §IV-A)."""
+    cfg = PDLConfig(sigma_elem=0.0, sigma_noise=0.0)
+    c, m = 3, 100
+    dev = PDLDevice(elem_offset=jnp.zeros((c, m, 2)), skew=jnp.zeros((c,)))
+    pol = jnp.ones((m,), jnp.int32)
+    strong = np.zeros((1, c, m), np.int8); strong[0, 0, :90] = 1
+    weak = np.zeros((1, c, m), np.int8); weak[0, 0, :55] = 1
+    r_strong = time_domain_argmax(cfg, dev, jnp.asarray(strong), pol)
+    r_weak = time_domain_argmax(cfg, dev, jnp.asarray(weak), pol)
+    lat_s = async_latency(cfg, r_strong, c, 3000.0)
+    lat_w = async_latency(cfg, r_weak, c, 3000.0)
+    assert float(lat_s[0]) < float(lat_w[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 60), st.integers(1, 16))
+def test_race_winner_is_argmin_property(c, m, b):
+    cfg = PDLConfig(sigma_elem=0.0, sigma_noise=0.0, t_res=0.0)
+    rng = np.random.default_rng(c * 1000 + m)
+    delays = jnp.asarray(rng.uniform(10, 1000, (b, c)).astype(np.float32))
+    res = race(cfg, delays)
+    np.testing.assert_array_equal(np.asarray(res.winner),
+                                  np.argmin(np.asarray(delays), -1))
+    np.testing.assert_allclose(np.asarray(res.latency),
+                               np.min(np.asarray(delays), -1), rtol=1e-6)

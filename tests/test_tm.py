@@ -1,0 +1,82 @@
+"""Tsetlin Machine: training convergence + inference invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantileBooleanizer, TMConfig, argmax_tournament,
+                        class_sums, clause_outputs, clause_polarity,
+                        evaluate, init_tm, predict, train_epoch)
+from repro.data import iris_like
+
+
+@pytest.fixture(scope="module")
+def iris_tm():
+    x, y = iris_like(seed=0)
+    bz = QuantileBooleanizer(3).fit(x[:120])
+    xb = bz.transform(x)
+    lits = np.concatenate([xb, 1 - xb], -1).astype(np.int8)
+    cfg = TMConfig(n_classes=3, n_clauses=10, n_features=12, T=5, s=1.5)
+    st = init_tm(cfg, jax.random.key(0))
+    key = jax.random.key(1)
+    for _ in range(40):
+        key, k = jax.random.split(key)
+        st = train_epoch(cfg, st, k, jnp.asarray(lits[:120]),
+                         jnp.asarray(y[:120]), batch_size=16)
+    return cfg, st, lits, y
+
+
+def test_tm_trains_to_paper_accuracy_regime(iris_tm):
+    """Paper Table I: 10-clause Iris TM ≈ 96.7% (synthetic stand-in ≥85%)."""
+    cfg, st, lits, y = iris_tm
+    acc = evaluate(cfg, st, jnp.asarray(lits[120:]), jnp.asarray(y[120:]))
+    assert acc >= 0.85, acc
+
+
+def test_ta_states_in_bounds(iris_tm):
+    cfg, st, _, _ = iris_tm
+    assert int(st.ta.min()) >= 1
+    assert int(st.ta.max()) <= 2 * cfg.n_states
+
+
+def test_clause_outputs_binary_and_empty_clause(iris_tm):
+    cfg, st, lits, _ = iris_tm
+    out = clause_outputs(cfg, st, jnp.asarray(lits[:8]))
+    assert set(np.unique(np.asarray(out))) <= {0, 1}
+    # empty clause (all-exclude) outputs 1 by convention
+    empty = init_tm(cfg, jax.random.key(9))._replace(
+        ta=jnp.ones_like(st.ta))   # all states=1 → exclude
+    out = clause_outputs(cfg, empty, jnp.asarray(lits[:4]))
+    assert (np.asarray(out) == 1).all()
+
+
+def test_class_sum_bounds(iris_tm):
+    cfg, st, lits, _ = iris_tm
+    sums = class_sums(cfg, clause_outputs(cfg, st, jnp.asarray(lits)))
+    half = cfg.n_clauses // 2 + cfg.n_clauses % 2
+    assert int(sums.max()) <= half
+    assert int(sums.min()) >= -(cfg.n_clauses // 2)
+
+
+def test_predict_equals_manual_argmax(iris_tm):
+    cfg, st, lits, _ = iris_tm
+    lits = jnp.asarray(lits[:16])
+    manual = argmax_tournament(class_sums(cfg, clause_outputs(cfg, st, lits)))
+    np.testing.assert_array_equal(np.asarray(predict(cfg, st, lits)),
+                                  np.asarray(manual))
+
+
+def test_time_domain_tm_lossless(iris_tm):
+    """End-to-end: trained TM classified identically via the PDL race."""
+    from repro.core import PDLConfig, make_device, time_domain_argmax
+    cfg, st, lits, y = iris_tm
+    cl = clause_outputs(cfg, st, jnp.asarray(lits))
+    exact = argmax_tournament(class_sums(cfg, cl))
+    pdl = PDLConfig(sigma_elem=2.0, sigma_noise=0.5)
+    dev = make_device(pdl, cfg.n_classes, cfg.n_clauses, jax.random.key(3))
+    res = time_domain_argmax(pdl, dev, cl, clause_polarity(cfg.n_clauses))
+    votes = class_sums(cfg, cl)
+    top2 = jax.lax.top_k(votes, 2)[0]
+    clear = np.asarray(top2[:, 0] != top2[:, 1])
+    assert (np.asarray(res.winner == exact))[clear].all()

@@ -1,0 +1,132 @@
+"""Training loop + optimizer + serving + data pipeline + checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.data import ShardedLoader, lm_token_stream
+from repro.models.model import LM
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup
+from repro.serve.decode import generate
+from repro.train.step import (TrainHParams, init_train_state,
+                              make_train_step)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(cfg, grads, state, params,
+                                        jnp.float32(0.05))
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    _, state2, m = adamw_update(cfg, {"w": jnp.asarray([1e4, 0.0, 0.0])},
+                                state, params, jnp.float32(1.0))
+    assert float(m["grad_norm"]) > 1e3
+    assert float(jnp.abs(state2.mu["w"]).max()) <= 0.11  # clipped to ~0.1
+
+
+def test_schedule():
+    lr = [float(cosine_warmup(jnp.int32(s), peak_lr=1.0, warmup=10,
+                              total=100)) for s in (0, 5, 10, 100)]
+    assert lr[0] == 0.0 and lr[1] == 0.5
+    assert lr[2] == pytest.approx(1.0, abs=1e-3)
+    assert lr[3] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_train_loss_decreases_tinyllama():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    lm = LM(cfg, tp=1, remat=False)
+    params = lm.init(jax.random.key(0))
+    from repro.optim.adamw import AdamWConfig
+    hp = TrainHParams(peak_lr=3e-3, warmup=5, total_steps=80, n_micro=2,
+                      adamw=AdamWConfig(clip_norm=5.0))
+    step = jax.jit(make_train_step(lm.loss, hp))
+    state = init_train_state(params)
+    stream = lm_token_stream(50_000, cfg.vocab_size, seed=0)
+    loader = ShardedLoader(stream, global_batch=8, seq_len=64)
+    losses = []
+    for i in range(50):
+        tokens, targets = next(loader)
+        state, metrics = step(state, {"tokens": jnp.asarray(tokens),
+                                      "targets": jnp.asarray(targets)})
+        losses.append(float(metrics["loss"]))
+    loader.close()
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_generate_shapes():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    lm = LM(cfg, tp=1, remat=False)
+    params = lm.init(jax.random.key(0))
+    prompt = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (3, 8), dtype=np.int32))
+    out = generate(lm, params, prompt, max_new=5)
+    assert out.shape == (3, 5)
+    assert int(out.max()) < cfg.vocab_size
+
+
+def test_loader_deterministic_resume():
+    stream = lm_token_stream(10_000, 100, seed=1)
+    a = ShardedLoader(stream, global_batch=4, seq_len=16, seed=3)
+    batches = [next(a) for _ in range(5)]
+    state = a.state_dict()
+    a.close()
+    assert state["step"] == 5
+    b = ShardedLoader.resume(stream, state, global_batch=4, seq_len=16)
+    tokens, targets = next(b)
+    b.close()
+    c = ShardedLoader(stream, global_batch=4, seq_len=16, seed=3,
+                      start_step=5)
+    t2, g2 = next(c)
+    c.close()
+    np.testing.assert_array_equal(tokens, t2)
+
+
+def test_loader_host_sharding():
+    stream = lm_token_stream(10_000, 100, seed=1)
+    full = ShardedLoader(stream, global_batch=8, seq_len=16, seed=7)
+    t_full, _ = next(full)
+    full.close()
+    parts = []
+    for host in range(2):
+        l = ShardedLoader(stream, global_batch=8, seq_len=16, seed=7,
+                          host_id=host, n_hosts=2)
+        parts.append(next(l)[0])
+        l.close()
+    np.testing.assert_array_equal(np.concatenate(parts), t_full)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, tree, extra={"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    out, extra = ckpt.restore(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(5))
+    assert extra["note"] == "x"
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.gc_keep(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    assert sorted(os.listdir(tmp_path)) == ["step_3", "step_4"]
