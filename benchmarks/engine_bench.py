@@ -1,0 +1,109 @@
+"""VoteEngine perf matrix: every backend × (C, M, B) grid → JSON rows.
+
+Each cell builds the backend's engine once (measuring layout-precompile
+time), then times the jitted ``infer`` and checks prediction parity with
+the oracle.  Output is JSON Lines — one object per (backend, shape) cell —
+so downstream tooling (dashboards, regression gates) can diff matrices
+across commits.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench --quick
+    PYTHONPATH=src python -m benchmarks.engine_bench --out matrix.jsonl
+
+``--quick`` runs a single small shape: one JSON row per backend.
+Also exposed as ``run()`` for ``python -m benchmarks.run`` (quick grid).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tm import TMConfig, TMState
+from repro.engine import available_backends, get_engine
+
+from .common import time_us
+
+F_FEATURES = 196            # Boolean features per sample (literals = 392)
+INCLUDE_DENSITY = 0.05      # ~trained-machine include sparsity
+
+FULL_GRID = {"C": (4, 10, 16), "M": (64, 100, 256), "B": (32, 256)}
+QUICK_GRID = {"C": (10,), "M": (100,), "B": (64,)}
+
+
+def _random_state(cfg: TMConfig, rng: np.random.Generator) -> TMState:
+    ta = np.where(rng.random((cfg.n_classes, cfg.n_clauses,
+                              cfg.n_literals)) < INCLUDE_DENSITY,
+                  cfg.n_states + 1, cfg.n_states)
+    return TMState(ta=jnp.asarray(ta, dtype=jnp.int32))
+
+
+def sweep(*, quick: bool = False, backends: list[str] | None = None
+          ) -> list[dict]:
+    grid = QUICK_GRID if quick else FULL_GRID
+    names = backends or available_backends()
+    rng = np.random.default_rng(0)
+    cells: list[dict] = []
+    for c in grid["C"]:
+        for m in grid["M"]:
+            cfg = TMConfig(n_classes=c, n_clauses=m, n_features=F_FEATURES)
+            st = _random_state(cfg, rng)
+            for b in grid["B"]:
+                lits = jnp.asarray(rng.integers(0, 2, (b, cfg.n_literals),
+                                                dtype=np.int8))
+                ref = get_engine("oracle", cfg, st).infer(lits)
+                for name in names:
+                    t0 = time.perf_counter()
+                    eng = get_engine(name, cfg, st)
+                    build_ms = (time.perf_counter() - t0) * 1e3
+                    us = time_us(eng.infer, lits)
+                    res = eng.infer(lits)
+                    cells.append({
+                        "backend": name, "C": c, "M": m, "B": b,
+                        "F": F_FEATURES,
+                        "build_ms": round(build_ms, 3),
+                        "infer_us": round(us, 1),
+                        "inf_per_s": round(b / (us * 1e-6), 1),
+                        "oracle_parity": bool(
+                            (np.asarray(res.prediction) ==
+                             np.asarray(ref.prediction)).all()),
+                    })
+    return cells
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run integration: the quick grid as CSV rows."""
+    return [(f"engine/{c['backend']}_C{c['C']}_M{c['M']}_B{c['B']}",
+             c["infer_us"],
+             f"{c['inf_per_s']:.0f} inf/s; build {c['build_ms']:.1f} ms; "
+             f"parity={c['oracle_parity']}")
+            for c in sweep(quick=True)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="single shape: one JSON row per backend")
+    ap.add_argument("--backends", nargs="*", default=None,
+                    help="subset of backends (default: all registered)")
+    ap.add_argument("--out", default=None,
+                    help="write JSON lines here instead of stdout")
+    args = ap.parse_args()
+    cells = sweep(quick=args.quick, backends=args.backends)
+    out = open(args.out, "w") if args.out else sys.stdout
+    try:
+        for cell in cells:
+            print(json.dumps(cell), file=out, flush=True)
+    finally:
+        if args.out:
+            out.close()
+    if any(not c["oracle_parity"] for c in cells):
+        sys.exit("FAIL: backend diverged from oracle predictions")
+
+
+if __name__ == "__main__":
+    main()

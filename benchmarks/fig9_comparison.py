@@ -4,15 +4,20 @@ the four Table-I TMs across implementations.
 Trains each TM on the synthetic stand-in dataset, measures the
 data-dependent hardware-model inputs (included literals after synthesis
 pruning, winner low-net fraction), evaluates the calibrated FPGA cost
-model for all four implementations, and reports the TD/generic ratios next
-to the paper's reported endpoints.
+model for every implementation in ``IMPLS``, and reports the TD/generic
+ratios next to the paper's reported endpoints.  Each trained machine is
+also pushed through every VoteEngine backend (registry iteration) to
+confirm the software implementations stay prediction-identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.hwmodel import HWConstants, cost, paper_models
+import numpy as np
+
+from repro.core.hwmodel import HWConstants, IMPLS, cost, paper_models
+from repro.engine import available_backends, get_engine
 
 from .common import trained_tm
 
@@ -28,24 +33,35 @@ def run() -> list[tuple[str, float, str]]:
     rows = []
     ratios = {"latency_ns": [], "power": [], "resources": []}
     for shape in paper_models():
-        _, _, _, _, stats = trained_tm(shape.name)
+        cfg, st, xte, _, stats = trained_tm(shape.name)
         measured = dataclasses.replace(
             shape,
             included_literals=max(2, int(round(stats["included_literals"]))),
             low_frac_winner=stats["low_frac_winner"])
-        td = cost("timedomain", measured, k)
-        gen = cost("generic", measured, k)
-        fpt = cost("fpt18", measured, k)
-        a21 = cost("async21", measured, k)
+        costs = {impl: cost(impl, measured, k) for impl in IMPLS}
         rows.append((f"fig9/accuracy/{shape.name}", stats["accuracy"],
                      "synthetic stand-in (Table I paper: .967/.90/.945/.954)"))
+
+        # every software backend must agree with the oracle on the
+        # trained machine (the lossless claim, engine-registry form)
+        ref = get_engine("oracle", cfg, st).infer(xte)
+        for name in available_backends():
+            if name == "oracle":
+                continue        # self-comparison is vacuous
+            res = get_engine(name, cfg, st).infer(xte)
+            agree = float(np.mean(np.asarray(res.prediction ==
+                                             ref.prediction)))
+            rows.append((f"fig9/engine_agreement/{shape.name}/{name}",
+                         agree, "VoteEngine backend vs oracle, trained TM"))
+
         for metric in ("latency_ns", "power", "resources"):
-            r = td[metric] / gen[metric]
+            r = costs["timedomain"][metric] / costs["generic"][metric]
             if not (shape.name == "iris-10" and metric == "power"):
                 ratios[metric].append(r)
+            detail = " ".join(f"{impl}={costs[impl][metric]:.1f}"
+                              for impl in IMPLS)
             rows.append((f"fig9/{metric}_td_over_generic/{shape.name}", r,
-                         f"gen={gen[metric]:.1f} td={td[metric]:.1f} "
-                         f"fpt18={fpt[metric]:.1f} async21={a21[metric]:.1f}"))
+                         detail))
     rows.append(("fig9/headline/latency_best", min(ratios["latency_ns"]),
                  f"paper {PAPER_CLAIMS['latency_best']} (-38%)"))
     rows.append(("fig9/headline/power_best", min(ratios["power"]),

@@ -4,6 +4,10 @@ Wall-clock here is CPU (the Pallas kernels execute compiled-for-TPU only on
 TPU; interpret mode is a correctness harness), so the numbers that matter
 are the *jnp reference* throughputs plus the kernels' MXU-formulation
 arithmetic intensities (derived), which is what the TPU roofline sees.
+
+TM inference rows iterate the VoteEngine registry — one model, every
+backend through the same ``infer`` entry point — instead of hand-wiring
+each kernel formulation.
 """
 
 from __future__ import annotations
@@ -12,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.popcount import pack_bits
+from repro.core.tm import TMConfig, TMState
+from repro.engine import available_backends, get_engine
 from repro.kernels import ref
-from repro.kernels.clause_eval import make_vote_matrix
 
 from .common import time_us
 
@@ -31,26 +35,23 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("kernel/popcount_swar_4096x512words", us,
                  f"{gbps:.1f} GB/s cpu; AI=0.25 flop/B -> HBM-bound on TPU"))
 
-    # fused TM clause+vote (MXU form): B=512, C=10, M=100, L=1568
+    # unified inference path: one MNIST-100-shaped TM, every VoteEngine
+    # backend (B=512, C=10, M=100, F=784; ~4% include density like a
+    # trained machine)
+    cfg = TMConfig(n_classes=10, n_clauses=100, n_features=784)
+    ta = np.where(rng.random((10, 100, 1568)) < 0.04,
+                  cfg.n_states + 1, cfg.n_states)
+    st = TMState(ta=jnp.asarray(ta, dtype=jnp.int32))
     lit = jnp.asarray(rng.integers(0, 2, (512, 1568), dtype=np.int8))
-    inc = jnp.asarray((rng.random((1000, 1568)) < 0.04).astype(np.int8))
-    vm = make_vote_matrix(10, 100)
-    g = jax.jit(ref.ref_clause_votes)
-    us = time_us(g, lit, inc, vm)
-    flops = 2 * 512 * 1000 * 1568 + 2 * 512 * 1000 * 10
-    rows.append(("kernel/tm_fused_votes_b512", us,
-                 f"{flops/(us*1e-6)/1e9:.1f} GFLOP/s cpu; fused: clause "
-                 f"matrix never hits HBM"))
+    for name in available_backends():
+        eng = get_engine(name, cfg, st)
+        us = time_us(eng.infer, lit)
+        rows.append((f"kernel/engine_{name}_b512", us,
+                     f"{512/(us*1e-6):.0f} inf/s cpu; VoteEngine registry"))
 
-    # BNN ±1 GEMM 1024³
-    x = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
-    w = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
-    h = jax.jit(ref.ref_binary_matmul)
-    us = time_us(h, x, w)
-    rows.append(("kernel/binary_matmul_1024", us,
-                 f"{2*1024**3/(us*1e-6)/1e9:.1f} GFLOP/s cpu (int8 MXU on TPU)"))
-
-    # PDL race sim: B=1024, C=10, M=100
+    # PDL race sim kernel (the engine's time_domain backend uses the jnp
+    # race, so the Pallas race kernel keeps its own coverage here):
+    # B=1024, C=10, M=100
     sel = jnp.asarray(rng.integers(0, 2, (1024, 10, 100), dtype=np.int8))
     ed = jnp.asarray(rng.normal([[[384.5, 617.6]]], 5.0,
                                 (10, 100, 2)).astype(np.float32))
@@ -59,4 +60,12 @@ def run() -> list[tuple[str, float, str]]:
     us = time_us(r, sel)
     rows.append(("kernel/pdl_race_b1024", us,
                  f"{1024/(us*1e-6):.0f} races/s cpu"))
+
+    # BNN ±1 GEMM 1024³
+    x = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
+    w = jnp.asarray(rng.choice([-1, 1], (1024, 1024)).astype(np.int8))
+    h = jax.jit(ref.ref_binary_matmul)
+    us = time_us(h, x, w)
+    rows.append(("kernel/binary_matmul_1024", us,
+                 f"{2*1024**3/(us*1e-6)/1e9:.1f} GFLOP/s cpu (int8 MXU on TPU)"))
     return rows

@@ -11,14 +11,16 @@ import time
 
 
 def main() -> None:
-    from . import (fig6_monotonicity, fig9_comparison, fig10_12_scaling,
-                   kernel_bench, roofline_report, table1_accuracy)
+    from . import (engine_bench, fig6_monotonicity, fig9_comparison,
+                   fig10_12_scaling, kernel_bench, roofline_report,
+                   table1_accuracy)
     modules = [
         ("fig6", fig6_monotonicity),
         ("table1", table1_accuracy),
         ("fig9", fig9_comparison),
         ("fig10-12", fig10_12_scaling),
         ("kernels", kernel_bench),
+        ("engine", engine_bench),
         ("roofline", roofline_report),
     ]
     flt = sys.argv[1] if len(sys.argv) > 1 else ""

@@ -1,10 +1,11 @@
 """Quickstart: the paper in 60 seconds.
 
-Trains a small Tsetlin Machine, then classifies the test set two ways:
-1. exact popcount + argmax (the adder-based baseline), and
-2. the paper's time-domain race (PDL delays + arbiter tree),
-showing they agree (lossless) and what the FPGA cost model says each
-implementation costs.
+Trains a small Tsetlin Machine, then classifies the test set through the
+unified VoteEngine registry — one model, five interchangeable
+popcount+argmax implementations (exact adder-based baselines, bit-packed
+SWAR, the fused MXU kernel, and the paper's time-domain PDL race) — and
+shows they agree (lossless) plus what the FPGA cost model says each
+hardware implementation costs.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,13 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PDLConfig, QuantileBooleanizer, TMConfig,
-                        argmax_tournament, async_latency, class_sums,
-                        clause_outputs, clause_polarity, cost, evaluate,
-                        init_tm, make_device, time_domain_argmax,
+from repro.core import (PDLConfig, QuantileBooleanizer, RaceResult, TMConfig,
+                        async_latency, cost, evaluate, init_tm, make_device,
                         train_epoch)
 from repro.core.hwmodel import HWConstants, TMShape
 from repro.data import iris_like
+from repro.engine import available_backends, get_engine
 
 
 def main():
@@ -41,20 +41,30 @@ def main():
     print(f"TM accuracy (iris-like, 10 clauses): {acc:.3f}  "
           f"(paper Table I: 0.967 on real Iris)")
 
-    # 3. classify via the time-domain race
-    cl = clause_outputs(cfg, st, jnp.asarray(lits[120:]))
-    exact = argmax_tournament(class_sums(cfg, cl))
+    # 3. one model, every inference backend: the VoteEngine registry
+    xte = jnp.asarray(lits[120:])
+    exact = get_engine("oracle", cfg, st).infer(xte)
+    for name in available_backends():
+        res = get_engine(name, cfg, st).infer(xte)
+        agree = float(jnp.mean((res.prediction ==
+                                exact.prediction).astype(jnp.float32)))
+        print(f"  engine {name:12s} agreement with oracle: {agree:.3f}")
+
+    # 4. the race on a *physical* device: variation + jitter (paper §III)
     pdl = PDLConfig()          # Table I average net delays
     dev = make_device(pdl, cfg.n_classes, cfg.n_clauses, jax.random.key(7))
-    res = time_domain_argmax(pdl, dev, cl, clause_polarity(cfg.n_clauses))
-    agree = float(jnp.mean((res.winner == exact).astype(jnp.float32)))
-    lat = async_latency(pdl, res, cfg.n_classes, 2000.0)
-    print(f"time-domain vs exact argmax agreement: {agree:.3f}")
+    res = get_engine("time_domain", cfg, st, pdl=pdl, device=dev).infer(xte)
+    agree = float(jnp.mean((res.prediction ==
+                            exact.prediction).astype(jnp.float32)))
+    race = RaceResult(winner=res.prediction, latency=res.aux["latency_ps"],
+                      metastable=res.aux["metastable"])
+    lat = async_latency(pdl, race, cfg.n_classes, 2000.0)
+    print(f"physical time-domain vs exact argmax agreement: {agree:.3f}")
     print(f"async per-inference latency: mean {float(lat.mean())/1000:.2f} ns"
           f" (data-dependent; worst-case {cfg.n_clauses*pdl.d_high/1000 + 4:.2f} ns+)")
-    print(f"metastable races: {float(res.metastable.mean()):.3f}")
+    print(f"metastable races: {float(race.metastable.mean()):.3f}")
 
-    # 4. what would this cost on the FPGA?
+    # 5. what would this cost on the FPGA?
     shape = TMShape(3, 10, 12, included_literals=8, low_frac_winner=0.7)
     k = HWConstants()
     for impl in ("generic", "fpt18", "timedomain"):

@@ -2,9 +2,10 @@
 full time-domain inference pipeline (paper §IV case study).
 
 - trains TM (50 clauses/class, T=5, s=7) on the synthetic MNIST stand-in;
+- evaluates through the unified VoteEngine path (oracle backend);
 - validates lossless time-domain classification at Table I net delays;
 - measures the data-dependent async latency distribution (±3σ, Fig. 10a);
-- cross-checks the fused MXU kernel (clause-eval + vote) bit-exactly;
+- cross-checks the fused MXU backend bit-exactly against the oracle;
 - prints the calibrated FPGA cost comparison (Fig. 9 row).
 
 Run: PYTHONPATH=src python examples/train_tm_mnist.py [--clauses 50]
@@ -17,14 +18,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PDLConfig, TMConfig, argmax_tournament, async_latency,
-                        class_sums, clause_outputs, clause_polarity, cost,
+from repro.core import (PDLConfig, RaceResult, TMConfig, async_latency, cost,
                         evaluate, init_tm, make_device, threshold_booleanize,
-                        time_domain_argmax, train_epoch)
+                        train_epoch)
 from repro.core.hwmodel import HWConstants, TMShape
 from repro.data import mnist_like
-from repro.kernels import ops as kops
-from repro.kernels.clause_eval import make_vote_matrix
+from repro.engine import get_engine
 
 
 def main():
@@ -54,35 +53,38 @@ def main():
             print(f"epoch {ep+1:3d}  test acc {acc:.3f}  "
                   f"({time.time()-t0:.0f}s)")
 
+    # --- eval through the unified engine path (oracle backend) ---
     xte = jnp.asarray(lits[n_tr:])
-    cl = clause_outputs(cfg, st, xte)
-    votes = class_sums(cfg, cl)
-    exact = argmax_tournament(votes)
+    oracle = get_engine("oracle", cfg, st)
+    ref = oracle.infer(xte)
+    votes, exact = ref.class_sums, ref.prediction
 
-    # --- time-domain race at Table I (mnist-50) net delays ---
+    # --- time-domain race at Table I (mnist-50) net delays, real device ---
     pdl = PDLConfig(d_low=402.8, d_high=603.3, sigma_elem=5.0,
                     sigma_noise=1.0)
     dev = make_device(pdl, cfg.n_classes, cfg.n_clauses, jax.random.key(7))
-    res = time_domain_argmax(pdl, dev, cl, clause_polarity(cfg.n_clauses),
-                             key=jax.random.key(8))
+    td = get_engine("time_domain", cfg, st, pdl=pdl, device=dev,
+                    noise_key=jax.random.key(8))
+    res = td.infer(xte)
     top2 = jax.lax.top_k(votes, 2)[0]
     clear = np.asarray(top2[:, 0] != top2[:, 1])
-    agree = float(np.mean(np.asarray(res.winner == exact)[clear]))
+    agree = float(np.mean(np.asarray(res.prediction == exact)[clear]))
     print(f"time-domain lossless agreement (non-tied): {agree:.4f}")
 
-    lat = np.asarray(async_latency(pdl, res, 10, 3000.0)) / 1000.0
+    race = RaceResult(winner=res.prediction, latency=res.aux["latency_ps"],
+                      metastable=res.aux["metastable"])
+    lat = np.asarray(async_latency(pdl, race, 10, 3000.0)) / 1000.0
     print(f"async latency: mean {lat.mean():.1f} ns  ±3σ "
           f"[{lat.mean()-3*lat.std():.1f}, {lat.mean()+3*lat.std():.1f}] ns; "
           f"worst-case {(cfg.n_clauses*pdl.d_high + 3000)/1000 + 10:.1f} ns "
           f"(rarely reached — paper Fig. 10a)")
 
-    # --- fused MXU kernel cross-check ---
-    inc = (st.ta > cfg.n_states).astype(jnp.int8).reshape(
-        cfg.n_classes * cfg.n_clauses, -1)
-    vm = make_vote_matrix(cfg.n_classes, cfg.n_clauses)
-    votes_kernel = kops.tm_fused_votes(xte[:64], inc, vm)
-    assert (np.asarray(votes_kernel) == np.asarray(votes[:64])).all()
-    print("fused Pallas kernel (clause-eval+vote) matches: OK")
+    # --- fused MXU backend cross-check (bit-exact vs oracle) ---
+    mxu = get_engine("mxu_fused", cfg, st)
+    r64 = mxu.infer(xte[:64])
+    assert (np.asarray(r64.class_sums) == np.asarray(votes[:64])).all()
+    assert (np.asarray(r64.prediction) == np.asarray(exact[:64])).all()
+    print("fused Pallas backend (clause-eval+vote) matches: OK")
 
     # --- FPGA cost model row (Fig. 9) ---
     incl = float((st.ta > cfg.n_states).sum(-1).mean())
@@ -94,9 +96,9 @@ def main():
         c = cost(impl, shape, k)
         print(f"  {impl:11s} latency {c['latency_ns']:6.1f} ns | "
               f"LUT+FF {c['resources']:6d} | rel. power {c['power']:7.2f}")
-    td, gen = cost("timedomain", shape, k), cost("generic", shape, k)
+    td_c, gen = cost("timedomain", shape, k), cost("generic", shape, k)
     print(f"time-domain vs generic: latency "
-          f"{100*(1-td['latency_ns']/gen['latency_ns']):.1f}% lower "
+          f"{100*(1-td_c['latency_ns']/gen['latency_ns']):.1f}% lower "
           f"(paper: up to 38%)")
 
 

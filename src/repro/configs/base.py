@@ -55,6 +55,10 @@ class ModelConfig:
     enc_len_ratio: int = 4       # encoder frames = seq_len // ratio
     # modality prefix stub (vlm): patch embeddings prepended
     prefix_len: int = 0
+    # TM-family inference: VoteEngine backend (repro.engine registry) and
+    # whether to shard_map infer over the batch axis for multi-device serving
+    backend: str = "oracle"
+    shard_batch: bool = False
     # sharding rule overrides (logical axis -> mesh axis or None)
     rules_overrides: tuple[tuple[str, Any], ...] = ()
     # which shapes this arch supports (long_500k only for sub-quadratic)

@@ -7,11 +7,14 @@ popcount/argmax path as a first-class feature.
 
 from .base import ModelConfig, register
 
-for name, (classes, clauses, features, t, s) in {
-    "tm-iris-10": (3, 10, 12, 5, 1.5),
-    "tm-iris-50": (3, 50, 12, 7, 6.5),
-    "tm-mnist-50": (10, 50, 784, 5, 7.0),
-    "tm-mnist-100": (10, 100, 784, 5, 10.0),
+# backend: the VoteEngine each architecture defaults to (repro.engine) —
+# small iris TMs stay on the functional oracle; the MNIST-scale ones use
+# the fused MXU kernel, the paper's flagship the time-domain race.
+for name, (classes, clauses, features, t, s, backend) in {
+    "tm-iris-10": (3, 10, 12, 5, 1.5, "oracle"),
+    "tm-iris-50": (3, 50, 12, 7, 6.5, "oracle"),
+    "tm-mnist-50": (10, 50, 784, 5, 7.0, "mxu_fused"),
+    "tm-mnist-100": (10, 100, 784, 5, 10.0, "time_domain"),
 }.items():
     register(ModelConfig(
         name=name, family="tm",
@@ -20,6 +23,7 @@ for name, (classes, clauses, features, t, s) in {
         d_ff=clauses,                        # M (clauses per class)
         rope_theta=t,                        # T (vote clamp)
         norm_eps=s,                          # s (specificity)
+        backend=backend,
         notes="paper Table I TM; fields repurposed (see docstring)",
     ))
 

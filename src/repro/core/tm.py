@@ -92,7 +92,15 @@ def class_sums(cfg: TMConfig, clauses: jax.Array) -> jax.Array:
     return signed_vote_count(clauses, pol[None, None, :])
 
 
-def predict(cfg: TMConfig, state: TMState, literals: jax.Array) -> jax.Array:
-    """(B, 2F) literals → (B,) predicted class (tournament argmax)."""
-    sums = class_sums(cfg, clause_outputs(cfg, state, literals))
-    return argmax_tournament(sums)
+def predict(cfg: TMConfig, state: TMState, literals: jax.Array,
+            *, backend: str | None = None) -> jax.Array:
+    """(B, 2F) literals → (B,) predicted class (tournament argmax).
+
+    Delegates to the :mod:`repro.engine` registry so every caller shares
+    one backend-dispatched inference path; ``backend=None`` selects the
+    default (the functional oracle).  For repeated calls on one state,
+    build the engine once with ``repro.engine.get_engine`` instead.
+    """
+    from repro.engine import DEFAULT_BACKEND, get_engine
+    engine = get_engine(backend or DEFAULT_BACKEND, cfg, state)
+    return engine.infer(literals).prediction

@@ -1,0 +1,31 @@
+"""One backend-dispatched inference path for popcount + argmax.
+
+>>> from repro.engine import get_engine
+>>> eng = get_engine("mxu_fused", cfg, state)   # or oracle / adder_tree /
+>>> eng.infer(literals).prediction              #   swar_packed / time_domain
+"""
+
+from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
+                   available_backends, get_engine, register_backend)
+from . import backends  # noqa: F401  (registers the built-in backends)
+from .sharding import ShardedEngine
+
+__all__ = ["DEFAULT_BACKEND", "EngineResult", "VoteEngine", "ShardedEngine",
+           "available_backends", "get_engine", "register_backend",
+           "engine_from_model_config"]
+
+
+def engine_from_model_config(model_cfg, state, **opts) -> VoteEngine:
+    """Build the engine a registered ``family="tm"`` ModelConfig asks for.
+
+    TM configs repurpose LM fields (see ``repro.configs.tm_paper``):
+    ``n_heads``=C, ``d_ff``=M (clauses/class), ``d_model``=F,
+    ``rope_theta``=T, ``norm_eps``=s; plus the ``backend`` /
+    ``shard_batch`` knobs this engine layer dispatches on.
+    """
+    from repro.core.tm import TMConfig
+    cfg = TMConfig(n_classes=model_cfg.n_heads, n_clauses=model_cfg.d_ff,
+                   n_features=model_cfg.d_model, T=int(model_cfg.rope_theta),
+                   s=model_cfg.norm_eps)
+    return get_engine(model_cfg.backend, cfg, state,
+                      shard_batch=model_cfg.shard_batch, **opts)

@@ -1,0 +1,219 @@
+"""Built-in VoteEngine backends.
+
+Five interchangeable implementations of the paper's fused popcount+argmax,
+one per hardware idea:
+
+======================  ====================================================
+``oracle``              einsum violations matmul + ±1 dot + tournament
+                        argmax — the functional reference.
+``adder_tree``          same clause eval; class sums via pairwise binary
+                        adder trees (the "generic" FPGA baseline structure).
+``swar_packed``         bit-packed clause storage (``pack_bits``): include
+                        masks and clause outputs live as uint32 words;
+                        violations are bitwise ANDs, sums are SWAR popcounts
+                        of polarity-masked words — memory-optimal layout.
+``mxu_fused``           the Pallas kernel (``clause_votes_pallas``): two
+                        chained MXU matmuls, clause matrix never in HBM.
+``time_domain``         the paper's PDL race: chain delays affine in the
+                        vote count, arbiter-tree argmin (``race``).
+======================  ====================================================
+
+Every backend precompiles its clause-state layout from ``TMState`` at
+construction (include masks, packed words, vote matrices, polarity masks),
+so ``infer`` does only literal-dependent work.  The jitted compute lives
+in *module-level* functions — engines built for the same shapes share one
+XLA compilation via JAX's jit cache, so constructing an engine per call
+(as ``tm.predict`` does) costs a cache lookup, not a recompile.
+
+All five return bit-exact identical ``prediction`` and ``class_sums``
+(property-tested in ``tests/test_engine.py``), including tie cases
+(lowest index wins).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.popcount import (argmax_tournament, pack_bits,
+                                 popcount_adder_tree, popcount_swar,
+                                 signed_vote_count)
+from repro.core.time_domain import PDLConfig, PDLDevice, pdl_delays, race
+from repro.core.tm import TMConfig, TMState, clause_polarity, include_mask
+from repro.kernels.clause_eval import clause_votes_pallas, make_vote_matrix
+from repro.kernels.ops import on_tpu
+
+from .base import EngineResult, register_backend
+
+__all__ = ["OracleEngine", "AdderTreeEngine", "SwarPackedEngine",
+           "MXUFusedEngine", "TimeDomainEngine"]
+
+
+def _clause_bits(inc: jax.Array, literals: jax.Array) -> jax.Array:
+    """(C, M, L) int32 include × (B, L) {0,1} literals → (B, C, M) int8.
+
+    Violation-count formulation (matches the MXU kernel bit-exactly):
+    a clause fires iff no included literal is 0.
+    """
+    viol = jnp.einsum("bf,cmf->bcm", (1 - literals).astype(jnp.int32), inc)
+    return (viol == 0).astype(jnp.int8)
+
+
+@jax.jit
+def _oracle_infer(inc, pol, literals):
+    clauses = _clause_bits(inc, literals)
+    sums = signed_vote_count(clauses, pol[None, None, :])
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@jax.jit
+def _adder_tree_infer(inc, pol, literals):
+    clauses = _clause_bits(inc, literals)
+    pos = (pol > 0).astype(jnp.int8)[None, None, :]
+    neg = (pol < 0).astype(jnp.int8)[None, None, :]
+    sums = (popcount_adder_tree(clauses * pos) -
+            popcount_adder_tree(clauses * neg))
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@functools.partial(jax.jit, static_argnames=("c", "m"))
+def _swar_infer(inc_words, pos_mask, neg_mask, literals, *, c, m):
+    not_words = pack_bits((1 - literals).astype(jnp.int8))       # (B, Wl)
+    hit = inc_words[None, :, :] & not_words[:, None, :]          # (B, CM, Wl)
+    clauses = jnp.all(hit == 0, axis=-1).reshape(-1, c, m)       # (B, C, M)
+    words = pack_bits(clauses.astype(jnp.int8))                  # (B, C, Wm)
+    sums = (popcount_swar(words & pos_mask) -
+            popcount_swar(words & neg_mask))
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_cm",
+                                             "interpret"))
+def _mxu_infer(inc, vm, literals, *, block_b, block_cm, interpret):
+    sums = clause_votes_pallas(literals, inc, vm, block_b=block_b,
+                               block_cm=block_cm, interpret=interpret)
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@functools.partial(jax.jit, static_argnames=("pdl", "n_neg"))
+def _time_domain_infer(inc, pol, device, noise_key, literals, *, pdl, n_neg):
+    clauses = _clause_bits(inc, literals)
+    pos = (pol > 0)[None, None, :]
+    low_sel = jnp.where(pos, clauses, 1 - clauses)               # (B, C, M)
+    low_count = low_sel.astype(jnp.int32).sum(-1)                # (B, C)
+    sums = low_count - n_neg              # low_count = votes + n_neg
+    if device is None:
+        delays = (pol.shape[0] * pdl.d_high
+                  - pdl.delta * low_count.astype(jnp.float32))
+    else:
+        delays = pdl_delays(pdl, device, clauses, pol, key=noise_key)
+    res = race(pdl, delays)
+    aux = {"latency_ps": res.latency, "metastable": res.metastable}
+    return EngineResult(res.winner, sums, aux)
+
+
+@register_backend("oracle")
+class OracleEngine:
+    """Functional reference: einsum clause eval + ±1 dot + tournament."""
+
+    _infer = staticmethod(_oracle_infer)
+
+    def __init__(self, cfg: TMConfig, state: TMState):
+        self.cfg = cfg
+        self._inc = include_mask(cfg, state).astype(jnp.int32)   # (C, M, L)
+        self._pol = clause_polarity(cfg.n_clauses)               # (M,) ±1
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return self._infer(self._inc, self._pol, literals)
+
+
+@register_backend("adder_tree")
+class AdderTreeEngine(OracleEngine):
+    """Class sums as two pairwise adder trees (+ votes, − votes).
+
+    Mirrors the generic FPGA popcount: depth ``ceil(log2 M)`` per tree,
+    which is the critical path the paper's time-domain design removes.
+    """
+
+    _infer = staticmethod(_adder_tree_infer)
+
+
+@register_backend("swar_packed")
+class SwarPackedEngine:
+    """Bit-packed clause storage: words all the way down.
+
+    Build time: include masks pack to ``(C·M, ceil(L/32))`` uint32 and the
+    clause polarity packs to two ``(ceil(M/32),)`` masks.  Infer: a clause
+    violates iff ``include_word & ~literal_word ≠ 0`` for any word; clause
+    outputs repack over the M axis and the class sum is
+    ``swar(words & pos_mask) − swar(words & neg_mask)``.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState):
+        self.cfg = cfg
+        inc = include_mask(cfg, state).reshape(
+            cfg.n_classes * cfg.n_clauses, cfg.n_literals)
+        self._inc_words = pack_bits(inc)                         # (CM, Wl)
+        pol = clause_polarity(cfg.n_clauses)
+        self._pos_mask = pack_bits((pol > 0).astype(jnp.int8))   # (Wm,)
+        self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return _swar_infer(self._inc_words, self._pos_mask, self._neg_mask,
+                           literals, c=self.cfg.n_classes,
+                           m=self.cfg.n_clauses)
+
+
+@register_backend("mxu_fused")
+class MXUFusedEngine:
+    """Fused Pallas kernel: clause-eval matmul chained into the vote matmul
+    so the (B, C·M) clause matrix never round-trips through HBM."""
+
+    def __init__(self, cfg: TMConfig, state: TMState, *,
+                 block_b: int = 128, block_cm: int = 128):
+        self.cfg = cfg
+        self._inc = include_mask(cfg, state).reshape(
+            cfg.n_classes * cfg.n_clauses, cfg.n_literals)       # (CM, L) int8
+        self._vm = make_vote_matrix(cfg.n_classes, cfg.n_clauses)
+        self._blocks = (block_b, block_cm)
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return _mxu_infer(self._inc, self._vm, literals,
+                          block_b=self._blocks[0], block_cm=self._blocks[1],
+                          interpret=not on_tpu())
+
+
+@register_backend("time_domain")
+class TimeDomainEngine:
+    """The paper's race: PDL chain delays + arbiter-tree argmin.
+
+    Default is the *ideal* device (no variation, no skew): chain delay is
+    the affine ``M·d_high − Δ·low_count`` computed from the integer low-net
+    count, so equal vote sums race to an exact tie and the arbiter's
+    predetermined guess (lowest index) matches the oracle argmax bit-exactly.
+    Pass ``device=PDLDevice(...)`` to simulate a physical chip via
+    per-element delays — then oracle agreement is physics, not arithmetic.
+
+    ``aux``: per-sample ``latency_ps`` (winning arrival, data-dependent —
+    paper §IV-A) and ``metastable`` (any arbiter gap < t_res).
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState, *,
+                 pdl: PDLConfig | None = None,
+                 device: PDLDevice | None = None,
+                 noise_key: jax.Array | None = None):
+        self.cfg = cfg
+        self.pdl = pdl if pdl is not None else PDLConfig(sigma_elem=0.0,
+                                                         sigma_noise=0.0)
+        self.device = device
+        self.noise_key = noise_key      # per-event jitter (device path only)
+        self._inc = include_mask(cfg, state).astype(jnp.int32)
+        self._pol = clause_polarity(cfg.n_clauses)
+        self._n_neg = cfg.n_clauses // 2        # odd-index (opposing) clauses
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return _time_domain_infer(self._inc, self._pol, self.device,
+                                  self.noise_key, literals, pdl=self.pdl,
+                                  n_neg=self._n_neg)

@@ -1,0 +1,92 @@
+"""VoteEngine: one backend-dispatched inference path for popcount + argmax.
+
+The paper's point is that TM inference past clause evaluation — count the
+votes, pick the winner — is *one fused operation* with many interchangeable
+implementations (adder tree, SWAR words, MXU matmul chain, PDL delay race).
+This module is the seam that makes them interchangeable in software:
+
+- :class:`EngineResult` — what every backend returns: the prediction, the
+  signed class sums, and backend-specific per-sample extras (``aux``).
+- :class:`VoteEngine` — the protocol: ``infer(literals) -> EngineResult``.
+- a string-keyed registry (:func:`register_backend`, :func:`get_engine`,
+  :func:`available_backends`) so backend choice is a config knob, not a
+  code fork.
+
+Engines are built once per ``(TMConfig, TMState)`` pair: each backend
+precompiles its own clause-state layout (include masks, bit-packed words,
+vote matrices, delay tables) at construction, so per-call work is only the
+math that depends on the input literals.
+
+``aux`` entries must be batch-leading arrays — that invariant is what lets
+:class:`repro.engine.sharding.ShardedEngine` shard any backend's ``infer``
+over the batch axis with a single ``PartitionSpec``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.tm import TMConfig, TMState
+
+__all__ = ["EngineResult", "VoteEngine", "register_backend", "get_engine",
+           "available_backends", "DEFAULT_BACKEND"]
+
+DEFAULT_BACKEND = "oracle"
+
+
+class EngineResult(NamedTuple):
+    prediction: jax.Array           # (B,) int32 — argmax class (ties → lowest)
+    class_sums: jax.Array           # (B, C) int32 — signed vote counts
+    aux: dict[str, jax.Array]       # backend extras; each array batch-leading
+
+
+@runtime_checkable
+class VoteEngine(Protocol):
+    """A built inference engine over one (cfg, state) clause layout."""
+
+    name: str
+    cfg: TMConfig
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult`."""
+        ...
+
+
+_REGISTRY: dict[str, Callable[..., VoteEngine]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a ``VoteEngine`` factory under ``name``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        factory.name = name
+        return factory
+    return deco
+
+
+def available_backends() -> list[str]:
+    """Sorted names of all registered backends."""
+    from . import backends  # noqa: F401  (import side effect: registration)
+    return sorted(_REGISTRY)
+
+
+def get_engine(name: str, cfg: TMConfig, state: TMState, *,
+               shard_batch: bool = False, **opts) -> VoteEngine:
+    """Build the named backend's engine for one (cfg, state).
+
+    ``shard_batch=True`` wraps ``infer`` in a ``shard_map`` over the batch
+    axis across all local devices (multi-device serving); extra ``opts``
+    are forwarded to the backend constructor (e.g. ``pdl=PDLConfig(...)``
+    or ``device=PDLDevice(...)`` for ``time_domain``).
+    """
+    from . import backends  # noqa: F401  (import side effect: registration)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown VoteEngine backend {name!r}; "
+                       f"available: {available_backends()}")
+    engine = _REGISTRY[name](cfg, state, **opts)
+    if shard_batch:
+        from .sharding import ShardedEngine
+        engine = ShardedEngine(engine)
+    return engine

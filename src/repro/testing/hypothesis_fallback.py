@@ -1,0 +1,126 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+``requirements-dev.txt`` installs real hypothesis where pip is available;
+hermetic images without it still need the property tests to *collect and
+run*.  This shim implements exactly the API surface this repo's tests use
+— ``given``, ``settings``, and ``strategies.{integers,lists,booleans,
+floats,sampled_from}`` with ``.filter``/``.map`` — as seeded random
+sampling: each ``@given`` test runs ``max_examples`` deterministic draws
+(no shrinking, no database).  ``tests/conftest.py`` installs it into
+``sys.modules`` only when ``import hypothesis`` fails.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+__all__ = ["given", "settings", "strategies", "install"]
+
+_FILTER_TRIES = 500     # rejection-sampling budget per draw
+
+
+class Unsatisfied(Exception):
+    """A .filter predicate rejected every candidate in budget."""
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def filter(self, predicate):
+        def draw(rng):
+            for _ in range(_FILTER_TRIES):
+                value = self._draw(rng)
+                if predicate(value):
+                    return value
+            raise Unsatisfied
+        return SearchStrategy(draw)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(pool))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    hi = 10 if max_size is None else max_size
+
+    def draw(rng):
+        return [elements.draw(rng)
+                for _ in range(rng.randint(min_size, hi))]
+    return SearchStrategy(draw)
+
+
+class settings:
+    """Decorator form only (what the tests use): stores max_examples."""
+
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, test_fn):
+        test_fn._fallback_max_examples = self.max_examples
+        return test_fn
+
+
+def given(*strats: SearchStrategy, **kw_strats: SearchStrategy):
+    def decorate(test_fn):
+        # NOT functools.wraps: __wrapped__ would make pytest resolve the
+        # original signature and demand fixtures for the strategy args
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 100)
+            # crc32, not hash(): stable across processes (PYTHONHASHSEED),
+            # so a failing draw reproduces on rerun; varied per test
+            rng = random.Random(zlib.crc32(test_fn.__qualname__.encode()))
+            done = attempts = 0
+            while done < n and attempts < n * 50:
+                attempts += 1
+                try:
+                    vals = [s.draw(rng) for s in strats]
+                    kvals = {k: s.draw(rng) for k, s in kw_strats.items()}
+                except Unsatisfied:
+                    continue
+                test_fn(*args, *vals, **kwargs, **kvals)
+                done += 1
+            if done == 0:
+                raise Unsatisfied(
+                    f"{test_fn.__qualname__}: no example satisfied .filter")
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(test_fn, attr))
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given, hyp.settings = given, settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "sampled_from", "lists"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    hyp.strategies = strat
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,18 @@
+"""Test bootstrap: src/ on sys.path + hypothesis fallback.
+
+Keeps the tier-1 command working even without PYTHONPATH=src, and lets the
+property tests collect on hermetic images that lack ``hypothesis`` (the
+shim in ``repro.testing.hypothesis_fallback`` runs the same invariants via
+seeded random sampling; real hypothesis is preferred when installed).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+    hypothesis_fallback.install()

@@ -1,0 +1,158 @@
+"""Unified VoteEngine: every backend bit-exact with the oracle.
+
+The registry's contract: for any (cfg, state) and any literal batch, all
+backends return identical ``prediction`` *and* ``class_sums`` — across
+non-power-of-two clause/class counts and tie cases, where the paper's
+arbiter (and ``jnp.argmax``) resolve to the lowest index.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.time_domain import PDLConfig, make_device
+from repro.core.tm import TMConfig, TMState, init_tm, predict
+from repro.engine import (DEFAULT_BACKEND, EngineResult, available_backends,
+                          engine_from_model_config, get_engine)
+
+ALL_BACKENDS = available_backends()
+
+# (C, M, F): non-power-of-two classes and clause counts, odd M (unequal
+# +/− polarity halves), tiny and wide feature spaces
+SHAPES = [(2, 6, 9), (3, 10, 12), (5, 7, 33), (4, 12, 5), (10, 25, 49)]
+
+
+def _random_tm(c, m, f, *, density=0.15, seed=0):
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, 2 * f)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    lits = rng.integers(0, 2, (17, 2 * f), dtype=np.int8)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32)), jnp.asarray(lits)
+
+
+def test_registry_has_all_paper_backends():
+    assert {"oracle", "adder_tree", "swar_packed", "mxu_fused",
+            "time_domain"} <= set(ALL_BACKENDS)
+
+
+def test_unknown_backend_raises():
+    cfg, st, _ = _random_tm(2, 4, 3)
+    with pytest.raises(KeyError, match="unknown VoteEngine backend"):
+        get_engine("fpga", cfg, st)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: f"C{s[0]}M{s[1]}F{s[2]}")
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_parity_randomized(backend, shape):
+    cfg, st, lits = _random_tm(*shape, seed=sum(shape))
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = get_engine(backend, cfg, st).infer(lits)
+    assert isinstance(res, EngineResult)
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_tie_break_lowest_index(backend):
+    """Duplicate class blocks ⇒ exactly tied sums ⇒ winner is lowest index."""
+    cfg, st, lits = _random_tm(4, 8, 11, seed=3)
+    ta = np.array(st.ta)          # mutable copy
+    ta[2] = ta[1] = ta[0]         # classes 0,1,2 identical: 3-way ties
+    st = TMState(ta=jnp.asarray(ta))
+    res = get_engine(backend, cfg, st).infer(lits)
+    sums = np.asarray(res.class_sums)
+    np.testing.assert_array_equal(sums[:, 0], sums[:, 1])
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.argmax(sums, -1))
+    # the tied block always beats-or-ties class 3, so winner ∈ {0, 3}
+    assert set(np.asarray(res.prediction).tolist()) <= {0, 3}
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_backend_matches_tm_predict_on_seeded_tm(backend):
+    """Acceptance check: get_engine(name).infer == tm.predict, seeded TM."""
+    cfg = TMConfig(n_classes=3, n_clauses=10, n_features=12)
+    st = init_tm(cfg, jax.random.key(42))
+    rng = np.random.default_rng(7)
+    lits = jnp.asarray(rng.integers(0, 2, (29, 24), dtype=np.int8))
+    expected = np.asarray(predict(cfg, st, lits))
+    got = np.asarray(get_engine(backend, cfg, st).infer(lits).prediction)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_predict_backend_kwarg():
+    cfg, st, lits = _random_tm(3, 9, 8, seed=5)
+    base = np.asarray(predict(cfg, st, lits))
+    for backend in ALL_BACKENDS:
+        np.testing.assert_array_equal(
+            np.asarray(predict(cfg, st, lits, backend=backend)), base)
+    assert DEFAULT_BACKEND in ALL_BACKENDS
+
+
+def test_time_domain_aux_and_physical_device():
+    cfg, st, lits = _random_tm(4, 10, 16, seed=9)
+    res = get_engine("time_domain", cfg, st).infer(lits)
+    assert res.aux["latency_ps"].shape == (lits.shape[0],)
+    assert res.aux["metastable"].dtype == bool
+    # stronger winners finish earlier: latency anticorrelates with max sum
+    best = np.asarray(res.class_sums).max(-1)
+    lat = np.asarray(res.aux["latency_ps"])
+    assert np.corrcoef(best, lat)[0, 1] < 0
+    # a physical device (variation, no skew) still mostly agrees
+    pdl = PDLConfig(sigma_elem=2.0, sigma_noise=0.0)
+    dev = make_device(pdl, cfg.n_classes, cfg.n_clauses, jax.random.key(1))
+    phys = get_engine("time_domain", cfg, st, pdl=pdl, device=dev).infer(lits)
+    agree = np.mean(np.asarray(phys.prediction == res.prediction))
+    assert agree > 0.8
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_shard_batch_parity(backend):
+    """shard_map wrapper returns identical results, ragged batch included."""
+    cfg, st, lits = _random_tm(3, 8, 10, seed=11)  # B=17: ragged on >1 dev
+    ref = get_engine(backend, cfg, st).infer(lits)
+    res = get_engine(backend, cfg, st, shard_batch=True).infer(lits)
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
+    for k in ref.aux:
+        np.testing.assert_allclose(np.asarray(res.aux[k]),
+                                   np.asarray(ref.aux[k]), rtol=1e-6)
+
+
+def test_shard_batch_rejects_noise_key():
+    """Sharding would replicate the same jitter draw on every device."""
+    cfg, st, _ = _random_tm(3, 8, 10, seed=13)
+    with pytest.raises(ValueError, match="noise_key"):
+        get_engine("time_domain", cfg, st, noise_key=jax.random.key(0),
+                   shard_batch=True)
+
+
+def test_engines_share_jit_cache():
+    """Building a fresh engine per call (as tm.predict does) must hit the
+    module-level jit cache, not recompile per instance."""
+    import time
+    cfg, st, lits = _random_tm(3, 10, 12, seed=17)
+    jax.block_until_ready(get_engine("oracle", cfg, st).infer(lits))  # warm
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(get_engine("oracle", cfg, st).infer(lits))
+    assert time.perf_counter() - t0 < 1.0   # recompiling would take seconds
+
+
+def test_engine_from_model_config():
+    from repro.configs import get_config
+    mcfg = get_config("tm-iris-10")
+    cfg = TMConfig(n_classes=3, n_clauses=10, n_features=12, T=5, s=1.5)
+    st = init_tm(cfg, jax.random.key(0))
+    eng = engine_from_model_config(mcfg, st)
+    assert eng.name == mcfg.backend
+    rng = np.random.default_rng(2)
+    lits = jnp.asarray(rng.integers(0, 2, (8, 24), dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(eng.infer(lits).prediction),
+                                  np.asarray(predict(cfg, st, lits)))

@@ -95,8 +95,12 @@ from repro.models.model import LM
 from repro.launch.dryrun import _lower
 from repro.roofline.analysis import collective_bytes
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# axis_types only exists on newer jax (>=0.5); explicit-Auto and the
+# legacy default behave identically for this dry-run, so gate on presence
+mesh_kwargs = {}
+if hasattr(jax.sharding, "AxisType"):
+    mesh_kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+mesh = jax.make_mesh((2, 2), ("data", "model"), **mesh_kwargs)
 out = {}
 for arch in ["tinyllama-1.1b", "llama4-scout-17b-a16e", "mamba2-130m"]:
     cfg = dataclasses.replace(reduced(get_config(arch)), name=arch)
