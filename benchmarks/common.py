@@ -15,12 +15,23 @@ from repro.core import (QuantileBooleanizer, TMConfig, class_sums,
 from repro.data import iris_like, mnist_like
 
 
+def _block_all(out):
+    """Block on *every* leaf of the returned pytree — EngineResult aux
+    arrays included — so async dispatch can't understate a backend that
+    returns extra per-sample outputs (e.g. ``time_domain`` latencies)."""
+    for leaf in jax.tree_util.tree_leaves(out):
+        block = getattr(leaf, "block_until_ready", None)
+        if block is not None:
+            block()
+    return out
+
+
 def time_us(fn, *args, repeat: int = 5, warmup: int = 1) -> float:
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        _block_all(fn(*args))
     t0 = time.perf_counter()
     for _ in range(repeat):
-        jax.block_until_ready(fn(*args))
+        _block_all(fn(*args))
     return (time.perf_counter() - t0) / repeat * 1e6
 
 

@@ -58,7 +58,9 @@ def sweep(*, quick: bool = False, backends: list[str] | None = None
                 ref = get_engine("oracle", cfg, st).infer(lits)
                 for name in names:
                     t0 = time.perf_counter()
-                    eng = get_engine(name, cfg, st)
+                    # cache=False: measure a cold layout precompile, not
+                    # an engine-cache hit
+                    eng = get_engine(name, cfg, st, cache=False)
                     build_ms = (time.perf_counter() - t0) * 1e3
                     us = time_us(eng.infer, lits)
                     res = eng.infer(lits)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Diff an engine_bench JSON-lines matrix against the committed baseline.
+
+Non-blocking perf gate: warns (GitHub ``::warning::`` annotations when
+running under Actions) on cells whose ``infer_us`` regressed more than
+the threshold vs ``benchmarks/baseline_engine.json``, and on cells that
+lost oracle parity (the latter is a correctness smell, still surfaced as
+a warning here because shared CI runners make timing noisy — the parity
+*test* gate lives in tests/test_engine.py).
+
+    PYTHONPATH=src python -m benchmarks.engine_bench --quick --out BENCH_engine.json
+    python scripts/check_perf.py BENCH_engine.json [--baseline PATH] [--threshold 0.25]
+
+Always exits 0: timing on shared runners is advisory, never a merge
+blocker.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+DEFAULT_BASELINE = REPO / "benchmarks" / "baseline_engine.json"
+
+
+def load_rows(path: Path) -> dict[tuple, dict]:
+    rows = {}
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        cell = json.loads(line)
+        rows[(cell["backend"], cell["C"], cell["M"], cell["B"])] = cell
+    return rows
+
+
+def warn(msg: str) -> None:
+    prefix = "::warning::" if os.environ.get("GITHUB_ACTIONS") else "WARNING: "
+    print(f"{prefix}{msg}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", type=Path, help="fresh engine_bench JSONL")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative infer_us regression that triggers a "
+                         "warning (default 0.25 = +25%%)")
+    args = ap.parse_args()
+
+    if not args.baseline.exists():
+        warn(f"no baseline at {args.baseline}; skipping perf diff")
+        return
+    base = load_rows(args.baseline)
+    new = load_rows(args.bench)
+
+    regressions = 0
+    for key, cell in sorted(new.items()):
+        if not cell.get("oracle_parity", True):
+            warn(f"{key}: lost oracle parity")
+        ref = base.get(key)
+        if ref is None:
+            print(f"{key}: new cell (no baseline), infer_us="
+                  f"{cell['infer_us']}")
+            continue
+        ratio = cell["infer_us"] / max(ref["infer_us"], 1e-9)
+        line = (f"{key}: infer_us {ref['infer_us']} -> {cell['infer_us']} "
+                f"({ratio:.2f}x baseline)")
+        if ratio > 1.0 + args.threshold:
+            warn(f"perf regression {line}")
+            regressions += 1
+        else:
+            print(line)
+    for key in sorted(set(base) - set(new)):
+        warn(f"{key}: present in baseline but missing from this run")
+
+    print(f"checked {len(new)} cells vs {args.baseline.name}: "
+          f"{regressions} regression(s) > {args.threshold:.0%}")
+    sys.exit(0)      # advisory only
+
+
+if __name__ == "__main__":
+    main()

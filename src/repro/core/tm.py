@@ -98,8 +98,10 @@ def predict(cfg: TMConfig, state: TMState, literals: jax.Array,
 
     Delegates to the :mod:`repro.engine` registry so every caller shares
     one backend-dispatched inference path; ``backend=None`` selects the
-    default (the functional oracle).  For repeated calls on one state,
-    build the engine once with ``repro.engine.get_engine`` instead.
+    default (the functional oracle).  Repeated calls on one state hit
+    ``get_engine``'s keyed engine cache, so the clause-state layout
+    (include masks, packed words, CSR indices) precompiles once, not per
+    call.
     """
     from repro.engine import DEFAULT_BACKEND, get_engine
     engine = get_engine(backend or DEFAULT_BACKEND, cfg, state)

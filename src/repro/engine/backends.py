@@ -1,6 +1,6 @@
 """Built-in VoteEngine backends.
 
-Five interchangeable implementations of the paper's fused popcount+argmax,
+Seven interchangeable implementations of the paper's fused popcount+argmax,
 one per hardware idea:
 
 ======================  ====================================================
@@ -12,11 +12,23 @@ one per hardware idea:
                         masks and clause outputs live as uint32 words;
                         violations are bitwise ANDs, sums are SWAR popcounts
                         of polarity-masked words — memory-optimal layout.
+``swar_fused``          the bit-packed layout, fused in one Pallas kernel
+                        (``swar_fused_votes_pallas``): blocked word-AND +
+                        in-kernel SWAR popcount + vote matmul — the
+                        ``(B, C·M, Wl)`` hit tensor never leaves VMEM.
+``sparse_csr``          clause-indexed (padded CSR/ELL) layout over only the
+                        *included* literals: batch-bit-packed gather + AND
+                        reduction — O(density) clause work, the trained-TM
+                        sparsity fast path.
 ``mxu_fused``           the Pallas kernel (``clause_votes_pallas``): two
                         chained MXU matmuls, clause matrix never in HBM.
 ``time_domain``         the paper's PDL race: chain delays affine in the
                         vote count, arbiter-tree argmin (``race``).
 ======================  ====================================================
+
+``mxu_fused`` and ``swar_fused`` take ``block_b``/``block_cm`` tile opts;
+when not given explicitly, ``get_engine`` consults the autotune cache
+(:mod:`repro.engine.autotune`) before falling back to the defaults.
 
 Every backend precompiles its clause-state layout from ``TMState`` at
 construction (include masks, packed words, vote matrices, polarity masks),
@@ -39,16 +51,19 @@ import jax.numpy as jnp
 
 from repro.core.popcount import (argmax_tournament, pack_bits,
                                  popcount_adder_tree, popcount_swar,
-                                 signed_vote_count)
+                                 signed_vote_count, unpack_bits)
 from repro.core.time_domain import PDLConfig, PDLDevice, pdl_delays, race
 from repro.core.tm import TMConfig, TMState, clause_polarity, include_mask
 from repro.kernels.clause_eval import clause_votes_pallas, make_vote_matrix
 from repro.kernels.ops import on_tpu
+from repro.kernels.swar_fused import swar_fused_votes_pallas
 
 from .base import EngineResult, register_backend
+from .sparse import ell_from_include, sparse_clause_words
 
 __all__ = ["OracleEngine", "AdderTreeEngine", "SwarPackedEngine",
-           "MXUFusedEngine", "TimeDomainEngine"]
+           "SwarFusedEngine", "SparseCSREngine", "MXUFusedEngine",
+           "TimeDomainEngine"]
 
 
 def _clause_bits(inc: jax.Array, literals: jax.Array) -> jax.Array:
@@ -86,6 +101,26 @@ def _swar_infer(inc_words, pos_mask, neg_mask, literals, *, c, m):
     words = pack_bits(clauses.astype(jnp.int8))                  # (B, C, Wm)
     sums = (popcount_swar(words & pos_mask) -
             popcount_swar(words & neg_mask))
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_cm",
+                                             "interpret"))
+def _swar_fused_infer(inc_words, vm, literals, *, block_b, block_cm,
+                      interpret):
+    not_words = pack_bits((1 - literals).astype(jnp.int8))       # (B, Wl)
+    sums = swar_fused_votes_pallas(not_words, inc_words, vm,
+                                   block_b=block_b, block_cm=block_cm,
+                                   interpret=interpret)
+    return EngineResult(argmax_tournament(sums), sums, {})
+
+
+@functools.partial(jax.jit, static_argnames=("c", "m"))
+def _sparse_csr_infer(indices, pol, literals, *, c, m):
+    cw = sparse_clause_words(indices, literals)      # (CM, Wb) uint32
+    clauses = unpack_bits(cw, literals.shape[0])     # (CM, B) int8
+    cl = clauses.reshape(c, m, -1).astype(jnp.int32)
+    sums = jnp.einsum("cmb,m->bc", cl, pol)
     return EngineResult(argmax_tournament(sums), sums, {})
 
 
@@ -164,6 +199,56 @@ class SwarPackedEngine:
         return _swar_infer(self._inc_words, self._pos_mask, self._neg_mask,
                            literals, c=self.cfg.n_classes,
                            m=self.cfg.n_clauses)
+
+
+@register_backend("swar_fused")
+class SwarFusedEngine:
+    """Fused bit-packed kernel: word-AND + SWAR popcount + vote matmul.
+
+    Same uint32 layout as ``swar_packed``, but the whole reduction chain
+    runs blocked inside one Pallas kernel, so the ``(B, C·M, Wl)`` hit
+    tensor only ever exists as a per-tile VMEM block instead of an HBM
+    intermediate.  ``block_b``/``block_cm`` are autotunable.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState, *,
+                 block_b: int = 8, block_cm: int = 128):
+        self.cfg = cfg
+        inc = include_mask(cfg, state).reshape(
+            cfg.n_classes * cfg.n_clauses, cfg.n_literals)
+        self._inc_words = pack_bits(inc)                         # (CM, Wl)
+        self._vm = make_vote_matrix(cfg.n_classes, cfg.n_clauses)
+        self._blocks = (block_b, block_cm)
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return _swar_fused_infer(self._inc_words, self._vm, literals,
+                                 block_b=self._blocks[0],
+                                 block_cm=self._blocks[1],
+                                 interpret=not on_tpu())
+
+
+@register_backend("sparse_csr")
+class SparseCSREngine:
+    """Clause-indexed sparsity fast path (padded CSR/ELL gather).
+
+    Build time: the include mask compresses to one ``(C·M, K)`` index
+    matrix over only the *included* literals (``K`` = max includes per
+    clause — ≈ 5% of L for trained machines).  Infer: literals bit-pack
+    over the batch axis, each clause gathers its K rows and AND-reduces —
+    clause-eval work scales with the include density instead of L.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState):
+        self.cfg = cfg
+        inc = include_mask(cfg, state).reshape(
+            cfg.n_classes * cfg.n_clauses, cfg.n_literals)
+        self.ell = ell_from_include(inc)
+        self._pol = clause_polarity(cfg.n_clauses)
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        return _sparse_csr_infer(self.ell.indices, self._pol, literals,
+                                 c=self.cfg.n_classes,
+                                 m=self.cfg.n_clauses)
 
 
 @register_backend("mxu_fused")

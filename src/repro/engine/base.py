@@ -17,6 +17,16 @@ precompiles its own clause-state layout (include masks, bit-packed words,
 vote matrices, delay tables) at construction, so per-call work is only the
 math that depends on the input literals.
 
+:func:`get_engine` additionally keeps a small keyed LRU cache of built
+engines: repeated calls with the *same* (backend, cfg, state arrays,
+options) — as ``tm.predict`` makes on every call — reuse the precompiled
+layout instead of rebuilding it.  State identity is by array object
+(``id``); entries hold only *weakrefs* to the state arrays and evict
+themselves when a state is garbage-collected, so the cache can neither
+confuse two different states nor retain dead ones.  A new ``TMState``
+simply builds (and caches) a new engine.  ``get_engine(..., cache=False)``
+bypasses it and :func:`clear_engine_cache` empties it.
+
 ``aux`` entries must be batch-leading arrays — that invariant is what lets
 :class:`repro.engine.sharding.ShardedEngine` shard any backend's ``infer``
 over the batch axis with a single ``PartitionSpec``.
@@ -24,6 +34,8 @@ over the batch axis with a single ``PartitionSpec``.
 
 from __future__ import annotations
 
+import weakref
+from collections import OrderedDict
 from typing import Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
@@ -31,9 +43,11 @@ import jax
 from repro.core.tm import TMConfig, TMState
 
 __all__ = ["EngineResult", "VoteEngine", "register_backend", "get_engine",
-           "available_backends", "DEFAULT_BACKEND"]
+           "available_backends", "clear_engine_cache", "engine_cache_info",
+           "DEFAULT_BACKEND"]
 
 DEFAULT_BACKEND = "oracle"
+ENGINE_CACHE_SIZE = 16
 
 
 class EngineResult(NamedTuple):
@@ -72,21 +86,122 @@ def available_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
+# key → (weakrefs to the state arrays, engine); OrderedDict as LRU.  The
+# weakref death callbacks evict the entry the moment any of its state
+# arrays is garbage-collected, which (a) keeps id-based state identity
+# sound — an id can only be recycled after the old array died, and by then
+# its entry is gone — and (b) means the cache never retains dead states:
+# a training loop predicting with a fresh state per step frees each old
+# state's layout as soon as the caller drops it.
+_ENGINE_CACHE: OrderedDict[tuple, tuple] = OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _cache_key(name, cfg, state, shard_batch, donate_literals, opts):
+    """Hashable cache key, or ``None`` when opts aren't cacheable
+    (e.g. a ``PDLDevice`` of arrays or a ``noise_key``)."""
+    try:
+        opts_key = tuple(sorted(opts.items()))
+        state_key = tuple((id(a), a.shape, str(a.dtype)) for a in state)
+        key = (name, cfg, state_key, shard_batch, donate_literals, opts_key)
+        hash(key)
+    except TypeError:
+        return None
+    return key
+
+
+def clear_engine_cache() -> None:
+    """Drop every cached engine."""
+    _ENGINE_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def engine_cache_info() -> dict:
+    """``{"size", "maxsize", "hits", "misses"}`` of the engine cache."""
+    return {"size": len(_ENGINE_CACHE), "maxsize": ENGINE_CACHE_SIZE,
+            **_CACHE_STATS}
+
+
+class DonatingEngine:
+    """Wrap ``infer`` in a jit that donates the literal buffer.
+
+    Safe only when the caller never reuses a literal batch after the call
+    (streaming serving).  Donation is input→output aliasing: it only pays
+    off when a backend output matches the literal buffer's shape/dtype —
+    none of the built-in backends' int32 results do today, so this is a
+    forward-compatibility hook (e.g. a backend echoing packed literals),
+    not a current-CPU win.  XLA's "donated buffers were not usable"
+    trace-time warning is suppressed here because unusable donation is
+    this wrapper's documented, harmless fallback.
+    """
+
+    def __init__(self, inner: VoteEngine):
+        self.inner = inner
+        self.cfg = inner.cfg
+        self.name = f"{inner.name}+donate"
+        self._jit = jax.jit(inner.infer, donate_argnums=0)
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return self._jit(literals)
+
+
 def get_engine(name: str, cfg: TMConfig, state: TMState, *,
-               shard_batch: bool = False, **opts) -> VoteEngine:
-    """Build the named backend's engine for one (cfg, state).
+               shard_batch: bool = False, cache: bool = True,
+               donate_literals: bool = False, **opts) -> VoteEngine:
+    """Build (or fetch from cache) the named backend's engine.
 
     ``shard_batch=True`` wraps ``infer`` in a ``shard_map`` over the batch
     axis across all local devices (multi-device serving); extra ``opts``
     are forwarded to the backend constructor (e.g. ``pdl=PDLConfig(...)``
     or ``device=PDLDevice(...)`` for ``time_domain``).
+
+    Tunable backends (``mxu_fused``, ``swar_fused``) whose tile opts are
+    not given explicitly get them from the autotune cache
+    (:mod:`repro.engine.autotune`) when an entry for this shape exists.
+
+    ``cache=True`` (default) memoizes built engines by (backend, cfg,
+    state-array identity, options) in a small LRU, so repeated calls —
+    ``tm.predict`` builds an engine per call — skip layout precompile.
+    ``donate_literals=True`` wraps ``infer`` to donate the input literal
+    buffer to XLA; only safe if callers never reuse a batch after the call.
     """
     from . import backends  # noqa: F401  (import side effect: registration)
     if name not in _REGISTRY:
         raise KeyError(f"unknown VoteEngine backend {name!r}; "
                        f"available: {available_backends()}")
+
+    from . import autotune
+    for opt, val in autotune.lookup(name, cfg).items():
+        opts.setdefault(opt, val)
+
+    key = _cache_key(name, cfg, state, shard_batch, donate_literals, opts) \
+        if cache else None
+    if key is not None and key in _ENGINE_CACHE:
+        _ENGINE_CACHE.move_to_end(key)
+        _CACHE_STATS["hits"] += 1
+        return _ENGINE_CACHE[key][1]
+
     engine = _REGISTRY[name](cfg, state, **opts)
     if shard_batch:
         from .sharding import ShardedEngine
         engine = ShardedEngine(engine)
+    if donate_literals:
+        engine = DonatingEngine(engine)
+    if key is not None:
+        _CACHE_STATS["misses"] += 1
+
+        def _evict(_ref, _key=key):
+            _ENGINE_CACHE.pop(_key, None)
+
+        try:
+            refs = tuple(weakref.ref(a, _evict) for a in state)
+        except TypeError:       # non-weakreferenceable leaf: pin instead
+            refs = tuple(state)
+        _ENGINE_CACHE[key] = (refs, engine)
+        while len(_ENGINE_CACHE) > ENGINE_CACHE_SIZE:
+            _ENGINE_CACHE.popitem(last=False)
     return engine

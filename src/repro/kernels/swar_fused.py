@@ -1,0 +1,94 @@
+"""Pallas kernel: fused bit-packed clause-eval + SWAR popcount + class vote.
+
+``repro.engine.backends._swar_infer`` (the ``swar_packed`` backend)
+materializes the full ``(B, C·M, Wl)`` uint32 ``hit`` tensor in HBM before
+reducing it — its dominant memory cost.  This kernel fuses the whole chain
+per tile so that tensor only ever exists as a ``(block_b, block_cm, Wl)``
+VMEM block:
+
+    hit[b,i,w]  = inc_words[i,w] & ~lit_words[b,w]      (VPU, bitwise)
+    viol[b,i]   = Σ_w swar_popcount(hit[b,i,w])         (VPU, SWAR)
+    clause      = (viol == 0)
+    votes[b,c] += clause @ vote_matrix[i,c]             (MXU)
+
+Grid ``(B/bb, CM/bc)``; the CM axis is the reduction axis of the vote
+matmul, so the ``(bb, C)`` output block accumulates across grid axis 1 —
+the clause matrix never round-trips through HBM, matching the paper's
+"popcount+argmax never exist as data" fusion at the word level.
+
+Padding is exact: padded include rows are all-zero words (no violation ⇒
+clause fires) but their vote-matrix rows are zero, contributing nothing;
+padded literal-word lanes are zero in both operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.popcount import _swar_word
+
+__all__ = ["swar_fused_votes_pallas", "DEFAULT_BLOCK_B", "DEFAULT_BLOCK_CM"]
+
+DEFAULT_BLOCK_B = 8         # sublane-aligned batch tile
+DEFAULT_BLOCK_CM = 128      # lane-aligned clause-row tile
+
+
+def _swar_fused_kernel(notlit_ref, inc_ref, vm_ref, o_ref):
+    j = pl.program_id(1)
+
+    notw = notlit_ref[...].astype(jnp.uint32)            # (bb, Wl)
+    incw = inc_ref[...].astype(jnp.uint32)               # (bc, Wl)
+    hit = incw[None, :, :] & notw[:, None, :]            # (bb, bc, Wl) VMEM
+    viol = _swar_word(hit).sum(axis=-1)                  # (bb, bc)
+
+    clause = (viol == 0).astype(jnp.float32)
+    votes = jax.lax.dot_general(
+        clause, vm_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bb, C)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += votes
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_cm",
+                                             "interpret"))
+def swar_fused_votes_pallas(not_words: jax.Array, inc_words: jax.Array,
+                            vote_matrix: jax.Array, *,
+                            block_b: int = DEFAULT_BLOCK_B,
+                            block_cm: int = DEFAULT_BLOCK_CM,
+                            interpret: bool = True) -> jax.Array:
+    """Fused bit-packed TM inference.
+
+    not_words (B, Wl) uint32 — packed ¬literals; inc_words (CM, Wl) uint32
+    — packed include masks; vote_matrix (CM, C) int8 → votes (B, C) int32.
+    """
+    b, wl = not_words.shape
+    cm, _ = inc_words.shape
+    c = vote_matrix.shape[1]
+    bp = -(-b // block_b) * block_b
+    cmp_ = -(-cm // block_cm) * block_cm
+    cp = -(-c // 128) * 128
+    notw = jnp.pad(not_words, ((0, bp - b), (0, 0)))
+    incw = jnp.pad(inc_words, ((0, cmp_ - cm), (0, 0)))
+    vm = jnp.pad(vote_matrix, ((0, cmp_ - cm), (0, cp - c)))
+
+    out = pl.pallas_call(
+        _swar_fused_kernel,
+        grid=(bp // block_b, cmp_ // block_cm),
+        in_specs=[
+            pl.BlockSpec((block_b, wl), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_cm, wl), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_cm, cp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, cp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, cp), jnp.float32),
+        interpret=interpret,
+    )(notw, incw, vm)
+    return out[:b, :c].astype(jnp.int32)

@@ -35,7 +35,9 @@ def test_bnn_trains():
         l, g = jax.value_and_grad(lambda q: bnn_loss(cfg, q, x, y))(p)
         return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
 
-    for _ in range(60):
+    # 150 full-batch steps: 60 plateaus at ~0.87 accuracy, 150 reaches
+    # ~0.98 with margin over the 0.9 assertion
+    for _ in range(150):
         params, loss = step(params)
     acc = float(jnp.mean((bnn_apply(cfg, params, x).argmax(-1) == y)))
     assert float(loss) < loss0

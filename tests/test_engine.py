@@ -33,8 +33,8 @@ def _random_tm(c, m, f, *, density=0.15, seed=0):
 
 
 def test_registry_has_all_paper_backends():
-    assert {"oracle", "adder_tree", "swar_packed", "mxu_fused",
-            "time_domain"} <= set(ALL_BACKENDS)
+    assert {"oracle", "adder_tree", "swar_packed", "swar_fused",
+            "sparse_csr", "mxu_fused", "time_domain"} <= set(ALL_BACKENDS)
 
 
 def test_unknown_backend_raises():
@@ -143,6 +143,126 @@ def test_engines_share_jit_cache():
     for _ in range(5):
         jax.block_until_ready(get_engine("oracle", cfg, st).infer(lits))
     assert time.perf_counter() - t0 < 1.0   # recompiling would take seconds
+
+
+@pytest.mark.parametrize("backend", ["sparse_csr", "swar_fused"])
+@pytest.mark.parametrize("density", [0.0, 1.0],
+                         ids=["all_empty_clauses", "all_include"])
+def test_sparsity_backends_density_extremes(backend, density):
+    """Empty clauses (fire unconditionally, oracle convention) and fully
+    dense clauses are the sparse layout's boundary cases."""
+    cfg, st, lits = _random_tm(3, 8, 11, density=density, seed=21)
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = get_engine(backend, cfg, st).infer(lits)
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
+
+
+def test_sparse_ell_layout():
+    from repro.engine.sparse import ell_from_include
+    inc = jnp.asarray([[1, 0, 1, 0, 0],
+                       [0, 0, 0, 0, 0],
+                       [1, 1, 1, 1, 1]], jnp.int8)
+    ell = ell_from_include(inc)
+    assert ell.k_max == 5 and ell.n_literals == 5
+    assert np.asarray(ell.nnz).tolist() == [2, 0, 5]
+    idx = np.asarray(ell.indices)
+    assert idx[0].tolist() == [0, 2, 5, 5, 5]   # padding → sentinel L
+    assert idx[1].tolist() == [5] * 5
+    assert idx[2].tolist() == [0, 1, 2, 3, 4]
+    assert 0.0 < ell.density <= 1.0
+
+
+def test_engine_cache_hit_is_free():
+    """Acceptance: the second get_engine with identical (cfg, state,
+    backend) returns the cached engine — build cost ≈ 0, same object."""
+    import time
+    from repro.engine import clear_engine_cache, engine_cache_info
+    clear_engine_cache()
+    cfg, st, lits = _random_tm(3, 10, 12, seed=23)
+    e1 = get_engine("sparse_csr", cfg, st)
+    t0 = time.perf_counter()
+    e2 = get_engine("sparse_csr", cfg, st)
+    build_ms = (time.perf_counter() - t0) * 1e3
+    assert e2 is e1
+    assert build_ms < 5.0, build_ms          # dict lookup, not a rebuild
+    assert engine_cache_info()["hits"] >= 1
+    # a state with identical values but different arrays must NOT hit
+    st2 = type(st)(ta=jnp.asarray(np.asarray(st.ta)))
+    assert get_engine("sparse_csr", cfg, st2) is not e1
+    # cache=False always builds fresh
+    assert get_engine("sparse_csr", cfg, st, cache=False) is not e1
+    # unhashable opts (arrays) silently bypass the cache
+    eng = get_engine("time_domain", cfg, st,
+                     noise_key=jax.random.key(0))
+    assert eng.infer(lits).prediction.shape == (lits.shape[0],)
+
+
+def test_engine_cache_evicts_dead_states():
+    """Entries hold weakrefs: dropping a state frees its cache slot (no
+    retention of retired states in training-eval loops)."""
+    import gc
+    from repro.engine import clear_engine_cache, engine_cache_info
+    clear_engine_cache()
+    cfg, st, _ = _random_tm(2, 4, 3, seed=200)
+    get_engine("oracle", cfg, st)
+    assert engine_cache_info()["size"] == 1
+    del st
+    gc.collect()
+    assert engine_cache_info()["size"] == 0
+
+
+def test_engine_cache_lru_bounded():
+    from repro.engine import clear_engine_cache, engine_cache_info
+    from repro.engine.base import ENGINE_CACHE_SIZE
+    clear_engine_cache()
+    for seed in range(ENGINE_CACHE_SIZE + 4):
+        cfg, st, _ = _random_tm(2, 4, 3, seed=100 + seed)
+        get_engine("oracle", cfg, st)
+    assert engine_cache_info()["size"] <= ENGINE_CACHE_SIZE
+
+
+def test_autotune_lookup_applied(tmp_path, monkeypatch):
+    """get_engine picks tuned tiles from the JSON cache; explicit opts win."""
+    import json
+    from repro.engine import autotune, clear_engine_cache
+    clear_engine_cache()
+    cfg, st, lits = _random_tm(3, 10, 12, seed=29)
+    key = autotune.shape_key("swar_fused", cfg)
+    cache = {"best": {key: {"block_b": 16, "block_cm": 64,
+                            "stale_opt": 1}}}
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps(cache))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    assert autotune.lookup("swar_fused", cfg) == {"block_b": 16,
+                                                 "block_cm": 64}
+    eng = get_engine("swar_fused", cfg, st, cache=False)
+    assert eng._blocks == (16, 64)
+    eng = get_engine("swar_fused", cfg, st, cache=False, block_b=8)
+    assert eng._blocks == (8, 64)
+    # untuned backend / missing file → defaults, no error
+    assert autotune.lookup("oracle", cfg) == {}
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "none.json"))
+    assert autotune.lookup("swar_fused", cfg) == {}
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = eng.infer(lits)
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+
+
+def test_donate_literals_wrapper():
+    cfg, st, _ = _random_tm(3, 9, 8, seed=31)
+    rng = np.random.default_rng(0)
+    lits_np = rng.integers(0, 2, (12, 16), dtype=np.int8)
+    ref = get_engine("oracle", cfg, st).infer(jnp.asarray(lits_np))
+    eng = get_engine("oracle", cfg, st, donate_literals=True)
+    assert eng.name == "oracle+donate"
+    # fresh device buffer per call: donation must not need caller reuse
+    res = eng.infer(jnp.asarray(lits_np))
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
 
 
 def test_engine_from_model_config():

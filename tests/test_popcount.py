@@ -32,6 +32,31 @@ def test_pack_unpack_roundtrip(bits):
             np.array(bits)).all()
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200).filter(lambda n: n % 32 != 0),
+       st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip_ragged(n, seed):
+    """Non-multiple-of-32 lengths: the padded tail must never leak back."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n, dtype=np.int8)
+    words = pack_bits(jnp.asarray(bits))
+    assert words.shape[-1] == -(-n // 32)
+    assert (np.asarray(unpack_bits(words, n)) == bits).all()
+
+
+@pytest.mark.parametrize("n", [1, 31, 33, 63, 65, 95, 127, 255, 300])
+def test_pack_unpack_roundtrip_2d(n):
+    """Batched (leading-axis) round-trip at awkward trailing lengths."""
+    rng = np.random.default_rng(n)
+    bits = rng.integers(0, 2, (5, n), dtype=np.int8)
+    back = np.asarray(unpack_bits(pack_bits(jnp.asarray(bits)), n))
+    assert back.shape == bits.shape
+    assert (back == bits).all()
+    # padded tail bits of the packed words are zero, so popcount agrees
+    assert (np.asarray(popcount_swar(pack_bits(jnp.asarray(bits)))) ==
+            bits.sum(-1)).all()
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.integers(0, 1), min_size=1, max_size=128))
 def test_popcount_permutation_invariant(bits):

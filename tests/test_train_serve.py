@@ -54,7 +54,9 @@ def test_train_loss_decreases_tinyllama():
     lm = LM(cfg, tp=1, remat=False)
     params = lm.init(jax.random.key(0))
     from repro.optim.adamw import AdamWConfig
-    hp = TrainHParams(peak_lr=3e-3, warmup=5, total_steps=80, n_micro=2,
+    # peak_lr 3e-3 only drops the loss ~0.22 in 50 steps on this reduced
+    # model; 1e-2 drops ~0.5, clearing the 0.3 assertion with margin
+    hp = TrainHParams(peak_lr=1e-2, warmup=5, total_steps=80, n_micro=2,
                       adamw=AdamWConfig(clip_norm=5.0))
     step = jax.jit(make_train_step(lm.loss, hp))
     state = init_train_state(params)
