@@ -1,0 +1,249 @@
+"""Serving load bench: the micro-batcher vs sequential per-request predict.
+
+Drives :class:`repro.serve.TMServer` with closed-loop (``N`` lockstep
+clients) and open-loop (Poisson arrivals) single-sample traffic across a
+(backend × max_batch × arrival rate) grid, and times the sequential
+baseline — one ``tm.predict``-style engine call per request, no
+batching — on the same request stream.  Output is JSON Lines, one object
+per cell (``kind`` discriminates serve rows from the baseline row), fed
+to ``scripts/check_perf.py`` against ``benchmarks/baseline_serve.json``.
+
+Every cell asserts *bit-exact parity*: each response must equal the
+oracle prediction for that request's row.  ``--quick`` additionally
+asserts the acceptance bar — closed-loop micro-batched throughput ≥ 3×
+the sequential baseline.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick
+    PYTHONPATH=src python -m benchmarks.serve_bench --out BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick --update-routing
+
+``--update-routing`` records the measured-best backend per *load-tested*
+batch size into the autotune cache (``serve_best`` entries): closed-loop
+traffic at ``max_batch=b`` saturates bucket ``b``, so each max_batch in
+the grid yields one measured route.  Buckets the grid didn't exercise
+keep the density heuristic (``route_buckets`` falls back per bucket).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tm import TMConfig
+from repro.engine import autotune, get_engine
+from repro.serve import (ServePolicy, TMServer, closed_loop, open_loop,
+                         percentiles_ms)
+
+from .engine_bench import F_FEATURES, _random_state
+
+# the bench shape: the paper-scale MNIST-like machine from engine_bench
+BENCH_SHAPE = {"C": 10, "M": 100, "F": F_FEATURES}
+POOL_SIZE = 1024
+
+FULL_BACKENDS = ("oracle", "swar_packed", "sparse_csr")
+FULL_MAX_BATCH = (16, 64, 128)
+FULL_RATES = (500.0, 2000.0)
+QUICK_BACKENDS = ("swar_packed", "sparse_csr")
+QUICK_MAX_BATCH = (64,)
+QUICK_RATES = (1000.0,)
+
+CLOSED_CLIENTS = 64
+QUICK_DURATION = 2.0
+FULL_DURATION = 4.0
+
+
+def _bench_tm(seed: int = 0):
+    cfg = TMConfig(n_classes=BENCH_SHAPE["C"], n_clauses=BENCH_SHAPE["M"],
+                   n_features=BENCH_SHAPE["F"])
+    rng = np.random.default_rng(seed)
+    state = _random_state(cfg, rng)
+    pool = rng.integers(0, 2, (POOL_SIZE, cfg.n_literals), dtype=np.int8)
+    return cfg, state, pool
+
+
+def sequential_baseline(cfg, state, pool, expect, *,
+                        duration: float) -> dict:
+    """One engine call per request, arrival order, no coalescing — what a
+    naive service doing ``tm.predict`` per request achieves.  Uses the
+    default backend through the cached-engine path, exactly like
+    ``tm.predict`` does."""
+    from repro.engine import DEFAULT_BACKEND
+    engine = get_engine(DEFAULT_BACKEND, cfg, state)
+    one = jnp.asarray(pool[0:1])
+    np.asarray(engine.infer(one).prediction)          # compile B=1
+    lats = []
+    n = 0
+    t0 = time.perf_counter()
+    end = t0 + duration
+    while time.perf_counter() < end:
+        row = n % POOL_SIZE
+        t1 = time.perf_counter()
+        pred = np.asarray(engine.infer(jnp.asarray(pool[row:row + 1]))
+                          .prediction)
+        lats.append(time.perf_counter() - t1)
+        assert pred[0] == expect[row], "sequential baseline parity"
+        n += 1
+    wall = time.perf_counter() - t0
+    p50_ms, p99_ms = percentiles_ms(lats)
+    return {"kind": "serve_baseline", "mode": "sequential",
+            "backend": DEFAULT_BACKEND, **BENCH_SHAPE,
+            "requests": n, "wall_s": round(wall, 3),
+            "throughput_rps": round(n / wall, 1),
+            "p50_ms": p50_ms, "p99_ms": p99_ms,
+            "parity": True}
+
+
+def run_cell(cfg, state, pool, expect, *, backend: str, max_batch: int,
+             mode: str, rate: float | None, duration: float) -> dict:
+    policy = ServePolicy(max_batch=max_batch, max_wait_us=2000,
+                         backend=backend)
+
+    def check_parity(row: int, res) -> None:
+        assert np.asarray(res.prediction)[0] == expect[row], \
+            f"parity: {mode} row {row}"
+
+    async def go() -> dict:
+        async with TMServer(cfg, state, policy) as server:
+            await server.warmup()
+            t0 = time.monotonic()
+            if mode == "closed":
+                n = await closed_loop(server, pool,
+                                      clients=CLOSED_CLIENTS,
+                                      duration=duration,
+                                      on_result=check_parity)
+            else:
+                n = await open_loop(server, pool, rate=rate,
+                                    duration=duration,
+                                    rng=np.random.default_rng(1),
+                                    on_result=check_parity)
+            wall = time.monotonic() - t0
+            s = server.stats()
+        return {"kind": "serve", "mode": mode, "backend": backend,
+                "max_batch": max_batch,
+                "rate": 0.0 if rate is None else rate, **BENCH_SHAPE,
+                "requests": n, "wall_s": round(wall, 3),
+                "throughput_rps": round(n / wall, 1),
+                "batch_fill": round(s["batch_fill"], 3),
+                "mean_batch_rows": round(s["mean_batch_rows"], 2),
+                "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+                "parity": True}
+
+    return asyncio.run(go())
+
+
+def sweep(*, quick: bool = False, update_routing: bool = False
+          ) -> list[dict]:
+    backends = QUICK_BACKENDS if quick else FULL_BACKENDS
+    max_batches = QUICK_MAX_BATCH if quick else FULL_MAX_BATCH
+    rates = QUICK_RATES if quick else FULL_RATES
+    duration = QUICK_DURATION if quick else FULL_DURATION
+
+    cfg, state, pool = _bench_tm()
+    expect = np.asarray(get_engine("oracle", cfg, state)
+                        .infer(jnp.asarray(pool)).prediction)
+
+    cells = [sequential_baseline(cfg, state, pool, expect,
+                                 duration=duration)]
+    for backend in backends:
+        for mb in max_batches:
+            cells.append(run_cell(cfg, state, pool, expect,
+                                  backend=backend, max_batch=mb,
+                                  mode="closed", rate=None,
+                                  duration=duration))
+            for rate in rates:
+                cells.append(run_cell(cfg, state, pool, expect,
+                                      backend=backend, max_batch=mb,
+                                      mode="open", rate=rate,
+                                      duration=duration))
+
+    if update_routing:
+        # measured route: per load-tested max_batch, the backend with the
+        # best closed-loop throughput serves that bucket (closed-loop at
+        # max_batch=b runs ~100% fill, i.e. it *is* the bucket-b
+        # measurement; unmeasured buckets keep the heuristic)
+        best: dict[int, tuple[float, str]] = {}
+        for c in cells:
+            if c["kind"] == "serve" and c["mode"] == "closed":
+                cur = best.get(c["max_batch"])
+                if cur is None or c["throughput_rps"] > cur[0]:
+                    best[c["max_batch"]] = (c["throughput_rps"],
+                                            c["backend"])
+        routes = {mb: name for mb, (_, name) in best.items()}
+        autotune.record_serve_routing(cfg, routes)
+        print(f"recorded serve routing {routes} -> {autotune.cache_path()}",
+              file=sys.stderr)
+    return cells
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run integration: the quick grid as CSV rows."""
+    cells = sweep(quick=True)
+    rows = []
+    for c in cells:
+        if c["kind"] == "serve_baseline":
+            name = "serve/sequential_baseline"
+        else:
+            name = (f"serve/{c['backend']}_{c['mode']}_mb{c['max_batch']}"
+                    + (f"_r{c['rate']:.0f}" if c["mode"] == "open" else ""))
+        rows.append((name, c["throughput_rps"],
+                     f"p50 {c['p50_ms']} ms; p99 {c['p99_ms']} ms; "
+                     f"parity={c['parity']}"))
+    rows.append(("serve/speedup_vs_sequential",
+                 round(speedup_vs_sequential(cells), 2), "target >= 3x"))
+    return rows
+
+
+def speedup_vs_sequential(cells: list[dict]) -> float:
+    """Best closed-loop micro-batched throughput over the sequential
+    per-request baseline."""
+    seq = next(c for c in cells if c["kind"] == "serve_baseline")
+    batched = max(c["throughput_rps"] for c in cells
+                  if c["kind"] == "serve" and c["mode"] == "closed")
+    return batched / seq["throughput_rps"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid + assert the ≥3x acceptance bar")
+    ap.add_argument("--out", default=None,
+                    help="write JSON lines here instead of stdout")
+    ap.add_argument("--update-routing", action="store_true",
+                    help="persist a measured bucket→backend route per "
+                         "load-tested max_batch into the autotune cache "
+                         "(unmeasured buckets keep the heuristic)")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="closed-loop speedup vs sequential that --quick "
+                         "must reach (default 3.0)")
+    args = ap.parse_args()
+
+    cells = sweep(quick=args.quick, update_routing=args.update_routing)
+    out = open(args.out, "w") if args.out else sys.stdout
+    try:
+        for cell in cells:
+            print(json.dumps(cell), file=out, flush=True)
+    finally:
+        if args.out:
+            out.close()
+
+    ratio = speedup_vs_sequential(cells)
+    seq = next(c for c in cells if c["kind"] == "serve_baseline")
+    print(f"sequential tm.predict baseline: "
+          f"{seq['throughput_rps']:,.0f} req/s; "
+          f"micro-batch speedup: {ratio:.1f}x "
+          f"(target >= {args.min_speedup:.0f}x); "
+          f"bit-exact parity asserted on every response",
+          file=sys.stderr)
+    if args.quick and ratio < args.min_speedup:
+        sys.exit(f"FAIL: micro-batcher speedup {ratio:.1f}x < "
+                 f"{args.min_speedup:.0f}x acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

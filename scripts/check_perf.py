@@ -1,15 +1,26 @@
 #!/usr/bin/env python
-"""Diff an engine_bench JSON-lines matrix against the committed baseline.
+"""Diff bench JSON-lines matrices against their committed baselines.
 
 Non-blocking perf gate: warns (GitHub ``::warning::`` annotations when
-running under Actions) on cells whose ``infer_us`` regressed more than
-the threshold vs ``benchmarks/baseline_engine.json``, and on cells that
-lost oracle parity (the latter is a correctness smell, still surfaced as
-a warning here because shared CI runners make timing noisy — the parity
-*test* gate lives in tests/test_engine.py).
+running under Actions) on cells that regressed more than the threshold
+vs the committed baseline, and on cells that lost oracle parity (a
+correctness smell, still surfaced as a warning here because shared CI
+runners make timing noisy — the parity *test* gates live in
+tests/test_engine.py and the serve bench's own assertions).
+
+Handles two row kinds in any of the given files:
+
+- engine rows (``benchmarks/engine_bench.py``): keyed by
+  (backend, C, M, B), metric ``infer_us`` (lower is better), baseline
+  ``benchmarks/baseline_engine.json``.
+- serve rows (``benchmarks/serve_bench.py``, ``kind`` of ``serve`` /
+  ``serve_baseline``): keyed by (kind, mode, backend, max_batch, rate),
+  metric ``p99_ms`` (lower is better), baseline
+  ``benchmarks/baseline_serve.json``.
 
     PYTHONPATH=src python -m benchmarks.engine_bench --quick --out BENCH_engine.json
-    python scripts/check_perf.py BENCH_engine.json [--baseline PATH] [--threshold 0.25]
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick --out BENCH_serve.json
+    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json
 
 Always exits 0: timing on shared runners is advisory, never a merge
 blocker.
@@ -24,7 +35,19 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
-DEFAULT_BASELINE = REPO / "benchmarks" / "baseline_engine.json"
+DEFAULT_ENGINE_BASELINE = REPO / "benchmarks" / "baseline_engine.json"
+DEFAULT_SERVE_BASELINE = REPO / "benchmarks" / "baseline_serve.json"
+
+
+def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
+    """→ (row key, metric field, baseline group) for one JSONL cell."""
+    kind = cell.get("kind", "engine")
+    if kind in ("serve", "serve_baseline"):
+        key = (kind, cell.get("mode"), cell["backend"],
+               cell.get("max_batch", 0), cell.get("rate", 0.0))
+        return key, "p99_ms", "serve"
+    return ((cell["backend"], cell["C"], cell["M"], cell["B"]),
+            "infer_us", "engine")
 
 
 def load_rows(path: Path) -> dict[tuple, dict]:
@@ -34,7 +57,8 @@ def load_rows(path: Path) -> dict[tuple, dict]:
         if not line:
             continue
         cell = json.loads(line)
-        rows[(cell["backend"], cell["C"], cell["M"], cell["B"])] = cell
+        key, _, _ = row_key_metric(cell)
+        rows[key] = cell
     return rows
 
 
@@ -45,40 +69,61 @@ def warn(msg: str) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench", type=Path, help="fresh engine_bench JSONL")
-    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("bench", type=Path, nargs="+",
+                    help="fresh engine_bench / serve_bench JSONL files")
+    ap.add_argument("--baseline", type=Path,
+                    default=DEFAULT_ENGINE_BASELINE,
+                    help="baseline for engine rows")
+    ap.add_argument("--serve-baseline", type=Path,
+                    default=DEFAULT_SERVE_BASELINE,
+                    help="baseline for serve rows")
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="relative infer_us regression that triggers a "
+                    help="relative metric regression that triggers a "
                          "warning (default 0.25 = +25%%)")
     args = ap.parse_args()
 
-    if not args.baseline.exists():
-        warn(f"no baseline at {args.baseline}; skipping perf diff")
-        return
-    base = load_rows(args.baseline)
-    new = load_rows(args.bench)
+    baselines = {"engine": args.baseline, "serve": args.serve_baseline}
+    base: dict[str, dict[tuple, dict]] = {}
+    for group, path in baselines.items():
+        if path.exists():
+            base[group] = load_rows(path)
+        else:
+            warn(f"no {group} baseline at {path}; skipping its perf diff")
+
+    new: dict[tuple, dict] = {}
+    for path in args.bench:
+        if not path.exists():
+            warn(f"bench file {path} missing; skipping")
+            continue
+        new.update(load_rows(path))
 
     regressions = 0
-    for key, cell in sorted(new.items()):
-        if not cell.get("oracle_parity", True):
+    seen_groups = set()
+    for key, cell in sorted(new.items(), key=lambda kv: str(kv[0])):
+        _, metric, group = row_key_metric(cell)
+        seen_groups.add(group)
+        if not cell.get("oracle_parity", cell.get("parity", True)):
             warn(f"{key}: lost oracle parity")
-        ref = base.get(key)
+        ref = base.get(group, {}).get(key)
         if ref is None:
-            print(f"{key}: new cell (no baseline), infer_us="
-                  f"{cell['infer_us']}")
+            print(f"{key}: new cell (no baseline), {metric}="
+                  f"{cell[metric]}")
             continue
-        ratio = cell["infer_us"] / max(ref["infer_us"], 1e-9)
-        line = (f"{key}: infer_us {ref['infer_us']} -> {cell['infer_us']} "
+        ratio = cell[metric] / max(ref[metric], 1e-9)
+        line = (f"{key}: {metric} {ref[metric]} -> {cell[metric]} "
                 f"({ratio:.2f}x baseline)")
         if ratio > 1.0 + args.threshold:
             warn(f"perf regression {line}")
             regressions += 1
         else:
             print(line)
-    for key in sorted(set(base) - set(new)):
-        warn(f"{key}: present in baseline but missing from this run")
+    for group in seen_groups:
+        for key in sorted(set(base.get(group, {})) - set(new),
+                          key=str):
+            warn(f"{key}: present in baseline but missing from this run")
 
-    print(f"checked {len(new)} cells vs {args.baseline.name}: "
+    print(f"checked {len(new)} cells vs "
+          f"{', '.join(baselines[g].name for g in sorted(seen_groups))}: "
           f"{regressions} regression(s) > {args.threshold:.0%}")
     sys.exit(0)      # advisory only
 

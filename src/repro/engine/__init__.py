@@ -7,13 +7,14 @@
 
 from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
                    available_backends, clear_engine_cache, engine_cache_info,
-                   get_engine, register_backend)
+                   get_engine, infer_padded, pad_batch, register_backend)
 from . import backends  # noqa: F401  (registers the built-in backends)
 from .sharding import ShardedEngine
 
 __all__ = ["DEFAULT_BACKEND", "EngineResult", "VoteEngine", "ShardedEngine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
-           "get_engine", "register_backend", "engine_from_model_config"]
+           "get_engine", "infer_padded", "pad_batch", "register_backend",
+           "engine_from_model_config"]
 
 
 def engine_from_model_config(model_cfg, state, **opts) -> VoteEngine:

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["SEARCH_SPACE", "cache_path", "device_kind", "shape_key",
-           "lookup", "autotune_backend", "run_sweep"]
+           "lookup", "serve_key", "serve_lookup", "record_serve_routing",
+           "autotune_backend", "run_sweep"]
 
 # candidate tiles per tunable backend; every combination is measured
 SEARCH_SPACE: dict[str, dict[str, tuple[int, ...]]] = {
@@ -87,6 +88,32 @@ def lookup(backend: str, cfg) -> dict:
     best = _load_cache().get("best", {}).get(shape_key(backend, cfg), {})
     # guard against stale caches naming opts the backend no longer takes
     return {k: v for k, v in best.items() if k in SEARCH_SPACE[backend]}
+
+
+def serve_key(cfg, bucket: int) -> str:
+    """Cache key for a measured bucket→backend serving route."""
+    return (f"serve|C{cfg.n_classes}|M{cfg.n_clauses}"
+            f"|L{cfg.n_literals}|B{bucket}|{device_kind()}")
+
+
+def serve_lookup(cfg, bucket: int) -> str | None:
+    """Measured-best backend for this TM shape at this bucket size, or
+    ``None`` when ``benchmarks/serve_bench.py --update-routing`` hasn't
+    recorded one on this device kind."""
+    return _load_cache().get("serve_best", {}).get(serve_key(cfg, bucket))
+
+
+def record_serve_routing(cfg, routes: dict[int, str]) -> None:
+    """Persist measured bucket→backend routes (from the serve load bench)
+    into the autotune cache, keyed like :func:`serve_lookup` reads them."""
+    data = _load_cache()
+    table = data.setdefault("serve_best", {})
+    for bucket, backend in routes.items():
+        table[serve_key(cfg, bucket)] = backend
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    _loaded.pop(str(path), None)
 
 
 def _time_us(fn, *args, repeat: int = 5) -> float:

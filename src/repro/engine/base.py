@@ -29,22 +29,39 @@ bypasses it and :func:`clear_engine_cache` empties it.
 
 ``aux`` entries must be batch-leading arrays — that invariant is what lets
 :class:`repro.engine.sharding.ShardedEngine` shard any backend's ``infer``
-over the batch axis with a single ``PartitionSpec``.
+over the batch axis with a single ``PartitionSpec``, and what lets
+:func:`infer_padded` strip padding rows from any backend's result.
+
+Padding seam: serving coalesces variable-size requests into a small set of
+bucket shapes (bounding XLA compilations).  :func:`pad_batch` /
+:func:`infer_padded` implement that *backend-agnostically*: every
+backend's ``infer`` is data-parallel over the batch axis — sample ``b``'s
+prediction, class sums, and aux depend only on literal row ``b`` — so
+extra all-zero rows provably cannot flip any real row's argmax and are
+sliced off before the caller sees them.
+
+The registry cache is guarded by a lock: a serving process hits
+``get_engine`` from scheduler/executor threads concurrently, and the bare
+``OrderedDict`` check-then-act sequences (``in`` → ``move_to_end``,
+``len`` → ``popitem``) race without one.
 """
 
 from __future__ import annotations
 
+import threading
 import weakref
 from collections import OrderedDict
 from typing import Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.tm import TMConfig, TMState
 
 __all__ = ["EngineResult", "VoteEngine", "register_backend", "get_engine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
-           "DEFAULT_BACKEND"]
+           "pad_batch", "infer_padded", "DEFAULT_BACKEND"]
 
 DEFAULT_BACKEND = "oracle"
 ENGINE_CACHE_SIZE = 16
@@ -95,6 +112,9 @@ def available_backends() -> list[str]:
 # state's layout as soon as the caller drops it.
 _ENGINE_CACHE: OrderedDict[tuple, tuple] = OrderedDict()
 _CACHE_STATS = {"hits": 0, "misses": 0}
+# RLock, not Lock: gc can run a weakref eviction callback on the thread
+# that already holds the lock (e.g. while inserting triggers a collection)
+_CACHE_LOCK = threading.RLock()
 
 
 def _cache_key(name, cfg, state, shard_batch, donate_literals, opts):
@@ -112,14 +132,16 @@ def _cache_key(name, cfg, state, shard_batch, donate_literals, opts):
 
 def clear_engine_cache() -> None:
     """Drop every cached engine."""
-    _ENGINE_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    with _CACHE_LOCK:
+        _ENGINE_CACHE.clear()
+        _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
 def engine_cache_info() -> dict:
     """``{"size", "maxsize", "hits", "misses"}`` of the engine cache."""
-    return {"size": len(_ENGINE_CACHE), "maxsize": ENGINE_CACHE_SIZE,
-            **_CACHE_STATS}
+    with _CACHE_LOCK:
+        return {"size": len(_ENGINE_CACHE), "maxsize": ENGINE_CACHE_SIZE,
+                **_CACHE_STATS}
 
 
 class DonatingEngine:
@@ -180,11 +202,18 @@ def get_engine(name: str, cfg: TMConfig, state: TMState, *,
 
     key = _cache_key(name, cfg, state, shard_batch, donate_literals, opts) \
         if cache else None
-    if key is not None and key in _ENGINE_CACHE:
-        _ENGINE_CACHE.move_to_end(key)
-        _CACHE_STATS["hits"] += 1
-        return _ENGINE_CACHE[key][1]
+    if key is not None:
+        with _CACHE_LOCK:
+            hit = _ENGINE_CACHE.get(key)
+            if hit is not None:
+                _ENGINE_CACHE.move_to_end(key)
+                _CACHE_STATS["hits"] += 1
+                return hit[1]
 
+    # build outside the lock: layout precompile can take milliseconds and
+    # must not serialize unrelated threads.  Two threads missing on the
+    # same key both build; the second insert wins — benign, both engines
+    # are equivalent.
     engine = _REGISTRY[name](cfg, state, **opts)
     if shard_batch:
         from .sharding import ShardedEngine
@@ -192,16 +221,67 @@ def get_engine(name: str, cfg: TMConfig, state: TMState, *,
     if donate_literals:
         engine = DonatingEngine(engine)
     if key is not None:
-        _CACHE_STATS["misses"] += 1
 
         def _evict(_ref, _key=key):
-            _ENGINE_CACHE.pop(_key, None)
+            with _CACHE_LOCK:
+                _ENGINE_CACHE.pop(_key, None)
 
         try:
             refs = tuple(weakref.ref(a, _evict) for a in state)
         except TypeError:       # non-weakreferenceable leaf: pin instead
             refs = tuple(state)
-        _ENGINE_CACHE[key] = (refs, engine)
-        while len(_ENGINE_CACHE) > ENGINE_CACHE_SIZE:
-            _ENGINE_CACHE.popitem(last=False)
+        with _CACHE_LOCK:
+            _CACHE_STATS["misses"] += 1
+            _ENGINE_CACHE[key] = (refs, engine)
+            while len(_ENGINE_CACHE) > ENGINE_CACHE_SIZE:
+                _ENGINE_CACHE.popitem(last=False)
     return engine
+
+
+def pad_batch(literals: jax.Array, bucket: int) -> jax.Array:
+    """Pad a ``(B, L)`` literal batch with all-zero rows up to ``bucket``.
+
+    Zero rows are *neutral*: every backend's ``infer`` is data-parallel
+    over the batch axis, so a padding row can only produce its own
+    (discarded) result — it provably cannot flip any real row's argmax or
+    perturb its class sums.  ``B == bucket`` returns the input unchanged;
+    ``B > bucket`` is an error (the caller picked the wrong bucket).
+    """
+    b = literals.shape[0]
+    if b > bucket:
+        raise ValueError(f"batch of {b} rows does not fit bucket {bucket}")
+    if b == bucket:
+        return literals
+    # numpy input pads in numpy: host-side assembly costs no XLA compile
+    # per (b, bucket) combination — the serving scheduler depends on this
+    # (its engine call is then the *only* traced shape, one per bucket)
+    xp = np if isinstance(literals, np.ndarray) else jnp
+    pad = xp.zeros((bucket - b,) + literals.shape[1:], literals.dtype)
+    return xp.concatenate([literals, pad], axis=0)
+
+
+def infer_padded(engine: VoteEngine, literals: jax.Array,
+                 bucket: int) -> EngineResult:
+    """``engine.infer`` at the bucket shape; results sliced to the real rows.
+
+    The backend-agnostic serving seam: one XLA compilation per (engine,
+    bucket) regardless of request sizes.  Relies on the two registry
+    invariants — batch-axis data parallelism (zero pad rows are inert, see
+    :func:`pad_batch`) and batch-leading ``aux`` arrays (so extras slice
+    the same way as predictions).  Exact for every deterministic backend;
+    a ``time_domain`` engine built with a ``noise_key`` draws jitter
+    shaped by the *padded* batch, so its per-sample noise (not its
+    layout) differs from an unpadded call.
+    """
+    b = literals.shape[0]
+    res = engine.infer(pad_batch(literals, bucket))
+    if b == bucket:
+        return res
+    if isinstance(literals, np.ndarray):
+        # host-side caller (the serving fan-out): slice in numpy so no
+        # per-(bucket, b) slice op is ever traced; result is numpy too
+        return EngineResult(
+            np.asarray(res.prediction)[:b], np.asarray(res.class_sums)[:b],
+            {k: np.asarray(v)[:b] for k, v in res.aux.items()})
+    return EngineResult(res.prediction[:b], res.class_sums[:b],
+                        {k: v[:b] for k, v in res.aux.items()})

@@ -1,0 +1,15 @@
+"""Serving layer: LM decode plus the TM micro-batching scheduler.
+
+``repro.serve.decode`` is the LM-side greedy decode; ``tm_server`` is the
+paper-side production path — an async micro-batcher that coalesces
+predict requests into shape-bucketed, padded batches over the VoteEngine
+registry (see ``python -m repro.launch.tm_serve``).
+"""
+
+from .loadgen import closed_loop, open_loop, percentiles_ms
+from .tm_server import (ServePolicy, TMServer, bucket_for, default_buckets,
+                        route_buckets)
+
+__all__ = ["ServePolicy", "TMServer", "bucket_for", "closed_loop",
+           "default_buckets", "open_loop", "percentiles_ms",
+           "route_buckets"]

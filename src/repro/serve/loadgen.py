@@ -1,0 +1,93 @@
+"""Shared traffic drivers for the TM serving layer.
+
+One implementation of the two canonical load shapes, used by both the
+``repro.launch.tm_serve`` launcher and ``benchmarks/serve_bench.py`` so
+the launcher demos and the perf matrix measure *identical* traffic:
+
+- :func:`open_loop` — Poisson arrivals at a fixed offered rate,
+  independent of service latency (overload shows up as queueing).
+- :func:`closed_loop` — ``clients`` lockstep callers, each firing its
+  next request the moment the previous one resolves (batch-heavy load).
+
+Both send single-sample requests drawn round-robin from a literal pool
+and return the number of requests served; ``on_result(row, result)``
+lets callers verify each response (the bench's bit-exact parity check).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import math
+import time
+
+__all__ = ["open_loop", "closed_loop", "percentiles_ms"]
+
+
+def percentiles_ms(latencies) -> tuple[float, float]:
+    """(p50, p99) in milliseconds from per-request latencies in seconds —
+    the one percentile definition (nearest-rank: ``ceil(p·n)``-th order
+    statistic) shared by ``TMServer.stats`` and the serve bench's
+    sequential baseline, so every row ``check_perf.py`` compares uses
+    identical math.  Nearest-rank, not ``int(p·n)``: the latter is one
+    rank high and would report the single worst outlier as p99 for any
+    window of ≤100 samples."""
+    lat = sorted(latencies)
+    if not lat:
+        return 0.0, 0.0
+
+    def pct(p: float) -> float:
+        return lat[min(len(lat) - 1, max(0, math.ceil(p * len(lat)) - 1))] \
+            * 1e3
+
+    return round(pct(0.50), 3), round(pct(0.99), 3)
+
+
+async def open_loop(server, pool, *, rate: float, duration: float,
+                    rng, client: int = 0, on_result=None) -> int:
+    """Poisson arrivals at ``rate`` req/s for ``duration`` seconds.
+
+    Absolute-time pacing: when the loop falls behind (sleep granularity,
+    GIL), arrivals burst to catch up instead of silently lowering the
+    offered rate.
+    """
+    tasks: list[asyncio.Task] = []
+    rows: list[int] = []
+    start = time.monotonic()
+    next_t = start
+    i = 0
+    while time.monotonic() < start + duration:
+        next_t += rng.exponential(1.0 / rate)
+        delay = next_t - time.monotonic()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        row = i % len(pool)
+        rows.append(row)
+        tasks.append(asyncio.ensure_future(
+            server.submit(pool[row:row + 1], client=client)))
+        i += 1
+    results = await asyncio.gather(*tasks)
+    if on_result is not None:
+        for row, res in zip(rows, results):
+            on_result(row, res)
+    return len(results)
+
+
+async def closed_loop(server, pool, *, clients: int, duration: float,
+                      on_result=None) -> int:
+    """``clients`` lockstep callers for ``duration`` seconds; each caller
+    fires its next request the moment the previous one resolves."""
+    end = time.monotonic() + duration
+    counts = [0] * clients
+
+    async def caller(cid: int) -> None:
+        i = cid
+        while time.monotonic() < end:
+            row = i % len(pool)
+            res = await server.submit(pool[row:row + 1], client=cid)
+            if on_result is not None:
+                on_result(row, res)
+            counts[cid] += 1
+            i += clients
+
+    await asyncio.gather(*[caller(c) for c in range(clients)])
+    return sum(counts)

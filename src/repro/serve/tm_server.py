@@ -1,0 +1,344 @@
+"""TM serving: async micro-batching scheduler over the VoteEngine registry.
+
+The paper's inference core (popcount + argmax) is embarrassingly
+batchable, but *requests* arrive one at a time — variable-size,
+asynchronous, bursty.  Like the paper's asynchronous time-domain design,
+throughput here comes from decoupling arrival from evaluation:
+
+- :class:`ServePolicy` — the batching knobs: coalesce waiting requests
+  until ``max_batch`` rows are gathered or ``max_wait_us`` has elapsed
+  since the batch opened, bounded-queue backpressure at ``queue_depth``.
+- bucketing — each coalesced batch pads (``repro.engine.pad_batch``,
+  all-zero neutral rows that provably cannot flip any real row's argmax)
+  to the smallest configured bucket that fits, so XLA compiles one
+  ``infer`` per (engine, bucket) instead of one per request size.
+- routing — each bucket maps to a backend name (:func:`route_buckets`):
+  an explicit choice, a measured route recorded in the autotune cache by
+  ``benchmarks/serve_bench.py --update-routing``, or the include-density
+  heuristic from the README.  Engines come from ``get_engine``, so
+  buckets sharing a backend share one cached engine (and tuned tiles).
+- fan-out — results slice back per request in arrival order; each request
+  resolves exactly once via its own future.  Batches execute on a single
+  worker thread, so completion order follows arrival order and the event
+  loop keeps *accepting* requests while a batch computes.  A failing
+  batch (bad routing entry, backend error) sets the exception on its own
+  requests' futures only — the scheduler outlives engine errors.
+
+>>> async with TMServer(cfg, state, ServePolicy(max_batch=64)) as srv:
+...     result = await srv.submit(literals)       # (n, 2F) or (2F,)
+...     result.prediction                         # (n,) int32
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.tm import TMConfig, TMState, include_mask
+from repro.engine import EngineResult, get_engine, infer_padded
+from repro.engine import autotune
+
+from .loadgen import percentiles_ms
+
+__all__ = ["ServePolicy", "TMServer", "bucket_for", "default_buckets",
+           "route_buckets"]
+
+_STOP = object()        # queue sentinel: wakes the scheduler for shutdown
+
+
+def default_buckets(max_batch: int) -> tuple[int, ...]:
+    """Powers of two up to (and always including) ``max_batch``."""
+    buckets = []
+    b = 1
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    return tuple(buckets)
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest configured bucket holding ``n`` rows; oversized batches
+    round up to a multiple of the largest bucket (a rare extra shape
+    beats failing the request)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """Micro-batching knobs.
+
+    ``max_batch``: row budget per coalesced batch — a waiting request that
+    would overflow it opens the *next* batch (requests are never split).
+    ``max_wait_us``: how long an open batch may wait for more arrivals;
+    0 dispatches every batch as soon as the queue momentarily drains.
+    ``buckets``: padded shapes to compile for (``None`` → powers of two up
+    to ``max_batch``).  ``queue_depth``: bound on queued requests —
+    ``submit`` awaits (backpressure) instead of growing an unbounded
+    backlog.  ``backend``: pin every bucket to one backend; ``None``
+    routes per bucket (measured routes, then density heuristic).
+    """
+
+    max_batch: int = 64
+    max_wait_us: int = 2000
+    buckets: tuple[int, ...] | None = None
+    queue_depth: int = 1024
+    backend: str | None = None
+
+    def resolved_buckets(self) -> tuple[int, ...]:
+        if self.buckets is not None:
+            return tuple(sorted(set(self.buckets)))
+        return default_buckets(self.max_batch)
+
+
+def route_buckets(cfg: TMConfig, state: TMState,
+                  buckets: tuple[int, ...], *,
+                  backend: str | None = None) -> dict[int, str]:
+    """bucket size → backend name.
+
+    Priority per bucket: explicit ``backend`` > a measured route in the
+    autotune cache (``autotune.serve_lookup``) > the README's density
+    heuristic (trained machines are ~5% include-dense → ``sparse_csr``;
+    dense/untrained → ``swar_packed``).  A measured route naming a
+    backend that is no longer registered (stale cache from an older
+    version) falls back to the heuristic, mirroring the stale-opts
+    guard in ``autotune.lookup``.
+    """
+    if backend is not None:
+        return {b: backend for b in buckets}
+    from repro.engine import available_backends
+    registered = set(available_backends())
+    density = float(np.asarray(include_mask(cfg, state)).mean())
+    fallback = "sparse_csr" if density <= 0.10 else "swar_packed"
+    routes = {}
+    for b in buckets:
+        measured = autotune.serve_lookup(cfg, b)
+        routes[b] = measured if measured in registered else fallback
+    return routes
+
+
+class _Request:
+    __slots__ = ("lits", "n", "future", "t_in", "client")
+
+    def __init__(self, lits, future, client):
+        self.lits = lits
+        self.n = lits.shape[0]
+        self.future = future
+        self.t_in = time.monotonic()
+        self.client = client
+
+
+class TMServer:
+    """Async micro-batching front end over one (cfg, state) TM.
+
+    Use as an async context manager, or call :meth:`start` / :meth:`stop`
+    explicitly.  :meth:`submit` awaits queue space (backpressure), then
+    awaits the request's slice of a batched ``infer``.  One scheduler
+    coroutine owns coalescing; one worker thread owns JAX compute, so the
+    event loop stays free to accept traffic mid-batch.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState,
+                 policy: ServePolicy | None = None, *,
+                 routing: dict[int, str] | None = None,
+                 latency_window: int = 4096):
+        self.cfg = cfg
+        self.state = state
+        self.policy = policy or ServePolicy()
+        self.buckets = self.policy.resolved_buckets()
+        self.routing = dict(routing) if routing is not None else \
+            route_buckets(cfg, state, self.buckets,
+                          backend=self.policy.backend)
+        self._queue: asyncio.Queue = asyncio.Queue(
+            maxsize=self.policy.queue_depth)
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="tm-serve-infer")
+        self._task: asyncio.Task | None = None
+        self._carry: _Request | None = None
+        self._closed = False
+        self._stop_seen = False
+        # stats (scheduler-coroutine-owned; read-only from stats())
+        self._latencies: deque[float] = deque(maxlen=latency_window)
+        self._n_requests = 0
+        self._n_rows = 0
+        self._n_batches = 0
+        self._n_padded_rows = 0
+        self._n_errors = 0
+
+    # -- lifecycle ----------------------------------------------------
+
+    async def start(self) -> "TMServer":
+        if self._task is not None:
+            raise RuntimeError("server already started")
+        self._task = asyncio.get_running_loop().create_task(
+            self._scheduler(), name="tm-serve-scheduler")
+        return self
+
+    async def stop(self) -> None:
+        """Graceful shutdown: drain queued requests, then stop."""
+        if self._closed:
+            return
+        self._closed = True
+        await self._queue.put(_STOP)
+        if self._task is not None:
+            await self._task
+        self._pool.shutdown(wait=True)
+
+    async def __aenter__(self) -> "TMServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def engine_for(self, bucket: int):
+        """The (cached) engine serving this bucket."""
+        backend = self.routing.get(bucket) or \
+            self.routing.get(self.buckets[-1], "oracle")
+        return get_engine(backend, self.cfg, self.state)
+
+    async def warmup(self) -> None:
+        """Compile every (engine, bucket) pair before taking traffic."""
+        loop = asyncio.get_running_loop()
+        zeros = np.zeros((1, self.cfg.n_literals), np.int8)
+        for bucket in self.buckets:
+            eng = self.engine_for(bucket)
+            await loop.run_in_executor(
+                self._pool,
+                lambda e=eng, b=bucket: np.asarray(
+                    infer_padded(e, zeros, b).prediction))
+
+    # -- request path -------------------------------------------------
+
+    async def submit(self, literals, *, client=None) -> EngineResult:
+        """One request: ``(n, 2F)`` or ``(2F,)`` {0,1} literals → the
+        request's own :class:`EngineResult` (batch-leading, ``n`` rows).
+
+        Awaits queue space when ``queue_depth`` requests are already
+        waiting — callers *feel* overload as latency, the server never
+        grows an unbounded backlog.
+        """
+        if self._closed:
+            raise RuntimeError("TMServer is stopped")
+        lits = np.asarray(literals, dtype=np.int8)
+        if lits.ndim == 1:
+            lits = lits[None, :]
+        if lits.ndim != 2 or lits.shape[1] != self.cfg.n_literals:
+            raise ValueError(
+                f"expected (n, {self.cfg.n_literals}) literals, "
+                f"got {np.shape(literals)}")
+        future = asyncio.get_running_loop().create_future()
+        await self._queue.put(_Request(lits, future, client))
+        return await future
+
+    # -- scheduler ----------------------------------------------------
+
+    async def _scheduler(self) -> None:
+        policy = self.policy
+        while True:
+            if self._carry is not None:
+                first, self._carry = self._carry, None
+            else:
+                if self._stop_seen and self._queue.empty():
+                    break
+                first = await self._queue.get()
+                if first is _STOP:
+                    self._stop_seen = True
+                    continue
+            batch, rows = [first], first.n
+            deadline = time.monotonic() + policy.max_wait_us * 1e-6
+            while rows < policy.max_batch:
+                timeout = deadline - time.monotonic()
+                try:
+                    if timeout <= 0:
+                        # past the wait budget: only take what's already
+                        # queued, never block the open batch further
+                        nxt = self._queue.get_nowait()
+                    else:
+                        nxt = await asyncio.wait_for(self._queue.get(),
+                                                     timeout)
+                except (asyncio.TimeoutError, asyncio.QueueEmpty):
+                    break
+                if nxt is _STOP:
+                    self._stop_seen = True
+                    break
+                if rows + nxt.n > policy.max_batch:
+                    self._carry = nxt       # opens the next batch
+                    break
+                batch.append(nxt)
+                rows += nxt.n
+            await self._run_batch(batch, rows)
+
+    async def _run_batch(self, batch: list[_Request], rows: int) -> None:
+        parts = [r.lits for r in batch]
+
+        def compute() -> tuple[EngineResult, int]:
+            # assemble and pad in numpy, fan out in numpy: only the
+            # engine call is traced, so XLA compiles once per (engine,
+            # bucket) no matter how request sizes combine
+            bucket = bucket_for(rows, self.buckets)
+            engine = self.engine_for(bucket)
+            lits = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            res = infer_padded(engine, lits, bucket)
+            return EngineResult(
+                np.asarray(res.prediction), np.asarray(res.class_sums),
+                {k: np.asarray(v) for k, v in res.aux.items()}), bucket
+
+        try:
+            res, bucket = await asyncio.get_running_loop().run_in_executor(
+                self._pool, compute)
+        except Exception as exc:
+            # a failing batch (bad routing entry, backend compile error)
+            # fails *its own* requests and nothing else: the scheduler
+            # must outlive any engine error or every later submit would
+            # hang on a dead queue
+            for req in batch:
+                if not req.future.done():
+                    req.future.set_exception(exc)
+            self._n_errors += len(batch)
+            return
+        done = time.monotonic()
+        offset = 0
+        for req in batch:
+            sl = slice(offset, offset + req.n)
+            offset += req.n
+            out = EngineResult(res.prediction[sl], res.class_sums[sl],
+                               {k: v[sl] for k, v in res.aux.items()})
+            if not req.future.done():
+                req.future.set_result(out)
+            self._latencies.append(done - req.t_in)
+        self._n_requests += len(batch)
+        self._n_rows += rows
+        self._n_batches += 1
+        self._n_padded_rows += bucket
+
+    # -- observability ------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters: queue depth, batch fill, latency percentiles.
+
+        ``batch_fill`` is real rows ÷ padded rows — how much of each
+        compiled bucket carried actual work.  Percentiles come from a
+        sliding window of per-request latencies (seconds → ms).
+        """
+        p50_ms, p99_ms = percentiles_ms(self._latencies)
+        return {
+            "requests": self._n_requests,
+            "rows": self._n_rows,
+            "batches": self._n_batches,
+            "errors": self._n_errors,
+            "qdepth": self._queue.qsize(),
+            "mean_batch_rows": self._n_rows / max(self._n_batches, 1),
+            "batch_fill": self._n_rows / max(self._n_padded_rows, 1),
+            "p50_ms": p50_ms,
+            "p99_ms": p99_ms,
+            "routing": {str(k): v for k, v in sorted(self.routing.items())},
+        }

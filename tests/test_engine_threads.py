@@ -1,0 +1,86 @@
+"""Engine-cache thread safety: concurrent get_engine vs clear.
+
+A serving process hits ``get_engine`` from the event-loop thread, the
+infer worker, and any management thread calling ``clear_engine_cache``.
+The LRU ``OrderedDict``'s check-then-act sequences (hit → ``move_to_end``,
+insert → ``popitem`` eviction, weakref death callbacks) race without the
+lock in ``engine/base.py`` — this hammers exactly those interleavings.
+"""
+
+import random
+from concurrent.futures import ThreadPoolExecutor
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tm import TMConfig, TMState
+from repro.engine import (clear_engine_cache, engine_cache_info, get_engine)
+from repro.engine.base import ENGINE_CACHE_SIZE
+
+
+def _tms(n, seed=0):
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=3)
+    rng = np.random.default_rng(seed)
+    states = []
+    for _ in range(n):
+        ta = np.where(rng.random((2, 4, 6)) < 0.3,
+                      cfg.n_states + 1, cfg.n_states)
+        states.append(TMState(ta=jnp.asarray(ta, jnp.int32)))
+    return cfg, states
+
+
+@pytest.mark.slow
+def test_engine_cache_concurrent_get_and_clear():
+    """8 workers × 250 iterations over 2×cache-size states, with
+    interleaved clears: no exception, bounded size, sane stats."""
+    clear_engine_cache()
+    cfg, states = _tms(2 * ENGINE_CACHE_SIZE)
+    backends = ("oracle", "swar_packed")
+
+    def hammer(worker_id: int) -> int:
+        rng = random.Random(worker_id)
+        for i in range(250):
+            state = states[rng.randrange(len(states))]
+            engine = get_engine(backends[i % len(backends)], cfg, state)
+            assert engine.cfg is cfg
+            if i % 41 == worker_id % 41:
+                clear_engine_cache()
+            if i % 17 == 0:
+                engine_cache_info()
+        return worker_id
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        # .map re-raises any worker exception (OrderedDict races surface
+        # as KeyError in move_to_end/popitem or RuntimeError in clear)
+        assert sorted(pool.map(hammer, range(8))) == list(range(8))
+
+    info = engine_cache_info()
+    assert info["size"] <= info["maxsize"] == ENGINE_CACHE_SIZE
+
+
+@pytest.mark.slow
+def test_engine_cache_concurrent_infer_correctness():
+    """Engines fetched concurrently still answer correctly: each thread
+    checks its state's engine against a precomputed oracle result."""
+    clear_engine_cache()
+    cfg, states = _tms(6, seed=1)
+    rng = np.random.default_rng(2)
+    lits = jnp.asarray(rng.integers(0, 2, (5, cfg.n_literals),
+                                    dtype=np.int8))
+    expected = [np.asarray(get_engine("oracle", cfg, s).infer(lits)
+                           .prediction) for s in states]
+    clear_engine_cache()
+
+    def worker(worker_id: int) -> None:
+        rng = random.Random(worker_id)
+        for i in range(60):
+            j = rng.randrange(len(states))
+            pred = np.asarray(
+                get_engine("oracle", cfg, states[j]).infer(lits).prediction)
+            np.testing.assert_array_equal(pred, expected[j])
+            if i % 23 == 0:
+                clear_engine_cache()
+
+    with ThreadPoolExecutor(max_workers=6) as pool:
+        list(pool.map(worker, range(6)))

@@ -1,0 +1,288 @@
+"""End-to-end property tests for the TM micro-batching scheduler.
+
+The serving contract, under randomized arrival orders, request sizes,
+batching policies, and bucket configurations:
+
+- **exactly once** — every submitted request resolves exactly one future;
+- **in order per client** — a client that awaits its requests
+  sequentially observes completions in its submission order;
+- **bit-exact** — each response equals a direct, unbatched oracle
+  ``infer`` on that request's own literals (predictions *and* class
+  sums), no matter how the scheduler coalesced, padded, or routed it.
+
+Degenerate configurations are covered explicitly: ``max_batch=1`` (every
+request its own batch), a single bucket, and oversized requests that
+exceed the largest bucket.  Runs under real hypothesis or the seeded
+fallback shim.
+"""
+
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tm import TMConfig, TMState
+from repro.engine import get_engine
+from repro.serve import (ServePolicy, TMServer, bucket_for, default_buckets,
+                         route_buckets)
+
+C, M, F = 3, 7, 9       # non-power-of-two shape, cheap enough per example
+N_CLIENTS = 3
+
+
+def _tm(seed=0, density=0.2):
+    cfg = TMConfig(n_classes=C, n_clauses=M, n_features=F)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((C, M, cfg.n_literals)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32))
+
+
+def _requests(cfg, sizes, seed):
+    """Round-robin the request stream over N_CLIENTS clients.
+    → list of (client, seq_within_client, literals)."""
+    rng = np.random.default_rng(seed)
+    reqs, seqs = [], [0] * N_CLIENTS
+    for i, n in enumerate(sizes):
+        client = i % N_CLIENTS
+        lits = rng.integers(0, 2, (n, cfg.n_literals), dtype=np.int8)
+        reqs.append((client, seqs[client], lits))
+        seqs[client] += 1
+    return reqs
+
+
+def _serve_all(cfg, state, policy, reqs):
+    """Submit every request concurrently; → (results, completion order)."""
+    completions = []
+
+    async def go():
+        async with TMServer(cfg, state, policy) as server:
+            async def one(client, seq, lits):
+                res = await server.submit(lits, client=client)
+                completions.append((client, seq))
+                return res
+
+            results = await asyncio.gather(
+                *[one(c, s, l) for c, s, l in reqs])
+            stats = server.stats()
+        return results, stats
+
+    results, stats = asyncio.run(go())
+    return results, completions, stats
+
+
+def _check_contract(cfg, state, reqs, results, completions):
+    oracle = get_engine("oracle", cfg, state)
+    # exactly once: one result per request, one completion per request
+    assert len(results) == len(reqs)
+    assert len(completions) == len(set(completions)) == len(reqs)
+    # in order per client
+    for client in range(N_CLIENTS):
+        seqs = [s for c, s in completions if c == client]
+        assert seqs == sorted(seqs), f"client {client} reordered: {seqs}"
+    # bit-exact vs direct unbatched oracle infer per request
+    for (client, seq, lits), res in zip(reqs, results):
+        ref = oracle.infer(jnp.asarray(lits))
+        assert np.asarray(res.prediction).shape == (len(lits),)
+        np.testing.assert_array_equal(np.asarray(res.prediction),
+                                      np.asarray(ref.prediction))
+        np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                      np.asarray(ref.class_sums))
+
+
+@settings(max_examples=8, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=5),
+                      min_size=1, max_size=20),
+       max_batch=st.sampled_from((1, 2, 4, 8, 16)),
+       max_wait_us=st.sampled_from((0, 200, 2000)),
+       buckets=st.sampled_from((None, (8,), (1, 4, 16))),
+       backend=st.sampled_from(("oracle", "swar_packed")),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_scheduler_contract_randomized(sizes, max_batch, max_wait_us,
+                                       buckets, backend, seed):
+    cfg, state = _tm(seed=5)
+    policy = ServePolicy(max_batch=max_batch, max_wait_us=max_wait_us,
+                         buckets=buckets, backend=backend)
+    reqs = _requests(cfg, sizes, seed)
+    results, completions, stats = _serve_all(cfg, state, policy, reqs)
+    _check_contract(cfg, state, reqs, results, completions)
+    assert stats["requests"] == len(reqs)
+    assert stats["rows"] == sum(sizes)
+
+
+def test_max_batch_one_degenerates_to_sequential():
+    """max_batch=1: every request is its own batch, contract still holds."""
+    cfg, state = _tm(seed=1)
+    reqs = _requests(cfg, [1, 2, 1, 3, 1, 1, 2], seed=2)
+    results, completions, stats = _serve_all(
+        cfg, state, ServePolicy(max_batch=1, backend="oracle"), reqs)
+    _check_contract(cfg, state, reqs, results, completions)
+    # single-sample requests can't coalesce past a 1-row budget: the
+    # 1-row requests each formed their own batch
+    assert stats["batches"] >= len(reqs)
+
+
+def test_single_bucket_and_oversized_requests():
+    """One configured bucket: everything pads to it; requests larger than
+    the bucket round up to a multiple of it instead of failing."""
+    cfg, state = _tm(seed=3)
+    sizes = [1, 3, 8, 2, 10, 1]          # 10 > the only bucket (8)
+    reqs = _requests(cfg, sizes, seed=4)
+    policy = ServePolicy(max_batch=16, max_wait_us=500, buckets=(8,),
+                         backend="oracle")
+    results, completions, stats = _serve_all(cfg, state, policy, reqs)
+    _check_contract(cfg, state, reqs, results, completions)
+    assert stats["rows"] == sum(sizes)
+
+
+def test_bucket_for_rounding():
+    buckets = (1, 4, 16)
+    assert bucket_for(1, buckets) == 1
+    assert bucket_for(3, buckets) == 4
+    assert bucket_for(16, buckets) == 16
+    assert bucket_for(17, buckets) == 32        # multiple of the largest
+    assert bucket_for(33, buckets) == 48
+    assert default_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert default_buckets(48) == (1, 2, 4, 8, 16, 32, 48)
+    assert default_buckets(1) == (1,)
+
+
+def test_routing_explicit_and_heuristic():
+    cfg, state = _tm(seed=6, density=0.05)      # trained-like: sparse
+    buckets = (1, 8)
+    assert route_buckets(cfg, state, buckets, backend="mxu_fused") == \
+        {1: "mxu_fused", 8: "mxu_fused"}
+    sparse = route_buckets(cfg, state, buckets)
+    assert set(sparse.values()) <= {"sparse_csr"}
+    cfg2, dense = _tm(seed=6, density=0.5)
+    assert set(route_buckets(cfg2, dense, buckets).values()) <= \
+        {"swar_packed"}
+
+
+def test_measured_routing_overrides_heuristic(tmp_path, monkeypatch):
+    """serve_bench --update-routing style entries win over the density
+    heuristic, per bucket, keyed to this device kind."""
+    from repro.engine import autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg, state = _tm(seed=8, density=0.05)
+    autotune.record_serve_routing(cfg, {8: "adder_tree",
+                                        1: "renamed_backend"})
+    routes = route_buckets(cfg, state, (1, 8))
+    assert routes[8] == "adder_tree"            # measured
+    # stale entry naming an unregistered backend → heuristic fallback
+    assert routes[1] == "sparse_csr"
+
+
+def test_submit_validation_and_lifecycle():
+    cfg, state = _tm(seed=7)
+
+    async def go():
+        server = TMServer(cfg, state, ServePolicy(max_batch=4,
+                                                  backend="oracle"))
+        with pytest.raises(RuntimeError, match="already started"):
+            async with server:
+                await server.start()
+        # after stop: reject new work
+        with pytest.raises(RuntimeError, match="stopped"):
+            await server.submit(np.zeros(cfg.n_literals, np.int8))
+        # second stop is a no-op
+        await server.stop()
+
+        async with TMServer(cfg, state,
+                            ServePolicy(max_batch=4,
+                                        backend="oracle")) as srv:
+            with pytest.raises(ValueError, match="expected"):
+                await srv.submit(np.zeros((2, 5), np.int8))
+            # 1-D input promotes to a single-sample request
+            res = await srv.submit(np.zeros(cfg.n_literals, np.int8))
+            assert np.asarray(res.prediction).shape == (1,)
+
+    asyncio.run(go())
+
+
+def test_failing_batch_fails_only_its_requests():
+    """An engine error (here: a bucket routed to a nonexistent backend)
+    surfaces on that batch's futures; the scheduler survives and keeps
+    serving buckets whose engines work."""
+    cfg, state = _tm(seed=12)
+    policy = ServePolicy(max_batch=4, max_wait_us=0, buckets=(1, 4))
+    routing = {1: "bogus_backend", 4: "oracle"}
+
+    async def go():
+        async with TMServer(cfg, state, policy, routing=routing) as server:
+            with pytest.raises(KeyError, match="unknown VoteEngine"):
+                await server.submit(np.zeros((1, cfg.n_literals), np.int8))
+            res = await server.submit(
+                np.zeros((4, cfg.n_literals), np.int8))
+            assert np.asarray(res.prediction).shape == (4,)
+            assert server.stats()["errors"] == 1
+
+    asyncio.run(go())
+
+
+def test_warmup_and_stats_shape():
+    cfg, state = _tm(seed=9)
+
+    async def go():
+        async with TMServer(cfg, state,
+                            ServePolicy(max_batch=8,
+                                        backend="oracle")) as server:
+            await server.warmup()
+            await server.submit(np.zeros((3, cfg.n_literals), np.int8))
+            s = server.stats()
+            for key in ("requests", "rows", "batches", "qdepth",
+                        "mean_batch_rows", "batch_fill", "p50_ms",
+                        "p99_ms", "routing"):
+                assert key in s, key
+            assert s["requests"] == 1 and s["rows"] == 3
+            assert 0 < s["batch_fill"] <= 1
+            assert s["qdepth"] == 0
+
+    asyncio.run(go())
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=9),
+                      min_size=5, max_size=40),
+       max_batch=st.sampled_from((1, 3, 8, 32)),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_scheduler_contract_heavy(sizes, max_batch, seed):
+    """Wider sweep of the same contract (more examples, bigger streams,
+    default bucket/backends routing) — the slow-tier companion of
+    test_scheduler_contract_randomized."""
+    cfg, state = _tm(seed=10, density=0.05)
+    policy = ServePolicy(max_batch=max_batch, max_wait_us=1000)
+    reqs = _requests(cfg, sizes, seed)
+    results, completions, stats = _serve_all(cfg, state, policy, reqs)
+    _check_contract(cfg, state, reqs, results, completions)
+
+
+@pytest.mark.slow
+def test_backpressure_bounded_queue():
+    """queue_depth bounds the backlog: with a tiny queue and a flood of
+    concurrent submits, qdepth never exceeds the bound and every request
+    still completes exactly once."""
+    cfg, state = _tm(seed=11)
+    policy = ServePolicy(max_batch=2, max_wait_us=0, queue_depth=4,
+                         backend="oracle")
+    seen_depths = []
+
+    async def go():
+        async with TMServer(cfg, state, policy) as server:
+            async def one(i):
+                res = await server.submit(
+                    np.zeros((1, cfg.n_literals), np.int8), client=i)
+                seen_depths.append(server.stats()["qdepth"])
+                return res
+
+            results = await asyncio.gather(*[one(i) for i in range(50)])
+        return results
+
+    results = asyncio.run(go())
+    assert len(results) == 50
+    assert max(seen_depths) <= policy.queue_depth
