@@ -13,7 +13,7 @@ import time
 def main() -> None:
     from . import (engine_bench, fig6_monotonicity, fig9_comparison,
                    fig10_12_scaling, kernel_bench, roofline_report,
-                   serve_bench, table1_accuracy)
+                   serve_bench, table1_accuracy, train_bench)
     modules = [
         ("fig6", fig6_monotonicity),
         ("table1", table1_accuracy),
@@ -22,6 +22,7 @@ def main() -> None:
         ("kernels", kernel_bench),
         ("engine", engine_bench),
         ("serve", serve_bench),
+        ("train", train_bench),
         ("roofline", roofline_report),
     ]
     flt = sys.argv[1] if len(sys.argv) > 1 else ""

@@ -1,0 +1,177 @@
+"""TrainEngine perf matrix: every training backend × (C, M, B) → JSON rows.
+
+Each cell builds the backend's engine, compiles ``step``, then times it
+end to end and asserts *delta parity* — the backend's new state must be
+bitwise equal to the reference ``train_step`` for the same PRNG key.
+Output is JSON Lines (``kind: "train"``), one object per (backend,
+shape) cell, fed to ``scripts/check_perf.py`` against
+``benchmarks/baseline_train.json``.
+
+    PYTHONPATH=src python -m benchmarks.train_bench --quick
+    PYTHONPATH=src python -m benchmarks.train_bench --out BENCH_train.json
+
+``--quick`` runs the bench shape only and additionally asserts the
+acceptance bar: the ``fused`` backend ≥ 2× the ``reference`` step time.
+
+The bench shape is class-heavy (C=128): training cost in the reference
+is dominated by the three ``O(B·C·M·2F)`` dense einsums (clause eval +
+the two per-class scatters), which is exactly the work the fused
+backend's SWAR votes + class-free segment-sum eliminate; the paper's
+MNIST-scale C=10 shape rides along in the grid for context.  Keys use
+the ``rbg`` PRNG (``--prng threefry2x32`` to override): the backends'
+Type I draws are bitwise identical under either implementation — parity
+is asserted per cell — and counter-based generation keeps the (shared,
+irreducible) cost of drawing ``2·B·M·2F`` uniform words from drowning
+out the backend differences the bench exists to show.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tm import TMConfig
+from repro.core.tm_train import train_step
+from repro.engine import available_train_backends, get_train_engine
+
+from .engine_bench import _random_state
+
+F_FEATURES = 192            # lane-aligned literals (2F = 384 = 3×128)
+
+# the bench shape: a 128-class machine (an extreme multi-class TM) — the
+# regime where the reference's C-scaled einsums dominate
+BENCH_SHAPE = {"C": 128, "M": 64, "B": 128}
+FULL_GRID = ({"C": 128, "M": 64, "B": 128}, {"C": 128, "M": 64, "B": 256},
+             {"C": 10, "M": 128, "B": 128}, {"C": 32, "M": 128, "B": 128})
+QUICK_GRID = (BENCH_SHAPE,)
+
+MIN_FUSED_SPEEDUP = 2.0
+
+
+def _time_round_robin(engines: dict, state, key, lits, y, *,
+                      repeat: int) -> dict[str, float]:
+    """Per-backend min step time in µs over interleaved rounds.
+
+    One step of *each* backend per round, min across rounds: interleaving
+    spreads machine noise (shared CI runners) across all backends instead
+    of letting a slow scheduling window poison one backend's cell, and
+    min is the robust estimator for a deterministic computation.
+    """
+    for eng in engines.values():                    # compile outside timing
+        jax.block_until_ready(eng.step(state, key, lits, y).ta)
+    best = {name: float("inf") for name in engines}
+    for _ in range(repeat):
+        for name, eng in engines.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.step(state, key, lits, y).ta)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: t * 1e6 for name, t in best.items()}
+
+
+def sweep(*, quick: bool = False, backends: list[str] | None = None,
+          prng: str = "rbg", repeat: int = 5) -> list[dict]:
+    """Run the matrix; → JSONL cell dicts (see module docstring)."""
+    grid = QUICK_GRID if quick else FULL_GRID
+    names = backends or available_train_backends()
+    rng = np.random.default_rng(0)
+    cells: list[dict] = []
+    for shape in grid:
+        c, m, b = shape["C"], shape["M"], shape["B"]
+        cfg = TMConfig(n_classes=c, n_clauses=m, n_features=F_FEATURES)
+        st = _random_state(cfg, rng)
+        lits = jnp.asarray(rng.integers(0, 2, (b, cfg.n_literals),
+                                        dtype=np.int8))
+        y = jnp.asarray(rng.integers(0, c, (b,), dtype=np.int32))
+        key = jax.random.key(0, impl=prng)
+        ref = train_step(cfg, st, key, lits, y)
+        engines, builds = {}, {}
+        for name in names:
+            t0 = time.perf_counter()
+            engines[name] = get_train_engine(name, cfg, cache=False)
+            builds[name] = (time.perf_counter() - t0) * 1e3
+        times = _time_round_robin(engines, st, key, lits, y, repeat=repeat)
+        for name in names:
+            got = engines[name].step(st, key, lits, y)
+            parity = bool((np.asarray(got.ta) == np.asarray(ref.ta)).all())
+            us = times[name]
+            cells.append({
+                "kind": "train", "backend": name, "C": c, "M": m, "B": b,
+                "F": F_FEATURES, "prng": prng,
+                "build_ms": round(builds[name], 3),
+                "step_us": round(us, 1),
+                "rows_per_s": round(b / (us * 1e-6), 1),
+                "delta_parity": parity,
+            })
+    return cells
+
+
+def fused_speedup(cells: list[dict], shape: dict = BENCH_SHAPE) -> float:
+    """``reference``/``fused`` step-time ratio on the bench shape."""
+    def cell(backend):
+        return next(c for c in cells if c["backend"] == backend
+                    and all(c[k] == v for k, v in shape.items()))
+    return cell("reference")["step_us"] / cell("fused")["step_us"]
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run integration: the quick grid as CSV rows."""
+    cells = sweep(quick=True)
+    rows = [(f"train/{c['backend']}_C{c['C']}_M{c['M']}_B{c['B']}",
+             c["step_us"],
+             f"{c['rows_per_s']:.0f} rows/s; build {c['build_ms']:.1f} ms; "
+             f"parity={c['delta_parity']}")
+            for c in cells]
+    rows.append(("train/fused_speedup_vs_reference",
+                 round(fused_speedup(cells), 2),
+                 f"target >= {MIN_FUSED_SPEEDUP:.0f}x"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="bench shape only + assert the ≥2x acceptance bar")
+    ap.add_argument("--backends", nargs="*", default=None,
+                    help="subset of backends (default: all registered)")
+    ap.add_argument("--prng", default="rbg",
+                    choices=("rbg", "threefry2x32"),
+                    help="PRNG impl for the step keys (parity holds for "
+                         "either; rbg keeps the shared draw cost small)")
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="write JSON lines here instead of stdout")
+    ap.add_argument("--min-speedup", type=float, default=MIN_FUSED_SPEEDUP,
+                    help="fused-vs-reference bar that --quick must reach")
+    args = ap.parse_args()
+
+    cells = sweep(quick=args.quick, backends=args.backends, prng=args.prng,
+                  repeat=args.repeat)
+    out = open(args.out, "w") if args.out else sys.stdout
+    try:
+        for cell in cells:
+            print(json.dumps(cell), file=out, flush=True)
+    finally:
+        if args.out:
+            out.close()
+
+    if any(not c["delta_parity"] for c in cells):
+        sys.exit("FAIL: a training backend diverged from the reference "
+                 "deltas")
+    if args.quick and args.backends is None:
+        ratio = fused_speedup(cells)
+        print(f"fused vs reference on the bench shape: {ratio:.2f}x "
+              f"(target >= {args.min_speedup:.1f}x); delta parity asserted "
+              f"on every cell", file=sys.stderr)
+        if ratio < args.min_speedup:
+            sys.exit(f"FAIL: fused speedup {ratio:.2f}x < "
+                     f"{args.min_speedup:.1f}x acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

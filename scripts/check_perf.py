@@ -8,7 +8,7 @@ correctness smell, still surfaced as a warning here because shared CI
 runners make timing noisy — the parity *test* gates live in
 tests/test_engine.py and the serve bench's own assertions).
 
-Handles two row kinds in any of the given files:
+Handles three row kinds in any of the given files:
 
 - engine rows (``benchmarks/engine_bench.py``): keyed by
   (backend, C, M, B), metric ``infer_us`` (lower is better), baseline
@@ -17,10 +17,14 @@ Handles two row kinds in any of the given files:
   ``serve_baseline``): keyed by (kind, mode, backend, max_batch, rate),
   metric ``p99_ms`` (lower is better), baseline
   ``benchmarks/baseline_serve.json``.
+- train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
+  keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
+  better), baseline ``benchmarks/baseline_train.json``.
 
     PYTHONPATH=src python -m benchmarks.engine_bench --quick --out BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.serve_bench --quick --out BENCH_serve.json
-    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.train_bench --quick --out BENCH_train.json
+    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json BENCH_train.json
 
 Always exits 0: timing on shared runners is advisory, never a merge
 blocker.
@@ -37,6 +41,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 DEFAULT_ENGINE_BASELINE = REPO / "benchmarks" / "baseline_engine.json"
 DEFAULT_SERVE_BASELINE = REPO / "benchmarks" / "baseline_serve.json"
+DEFAULT_TRAIN_BASELINE = REPO / "benchmarks" / "baseline_train.json"
 
 
 def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
@@ -46,6 +51,9 @@ def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
         key = (kind, cell.get("mode"), cell["backend"],
                cell.get("max_batch", 0), cell.get("rate", 0.0))
         return key, "p99_ms", "serve"
+    if kind == "train":
+        return ((kind, cell["backend"], cell["C"], cell["M"], cell["B"]),
+                "step_us", "train")
     return ((cell["backend"], cell["C"], cell["M"], cell["B"]),
             "infer_us", "engine")
 
@@ -77,12 +85,16 @@ def main() -> None:
     ap.add_argument("--serve-baseline", type=Path,
                     default=DEFAULT_SERVE_BASELINE,
                     help="baseline for serve rows")
+    ap.add_argument("--train-baseline", type=Path,
+                    default=DEFAULT_TRAIN_BASELINE,
+                    help="baseline for train rows")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="relative metric regression that triggers a "
                          "warning (default 0.25 = +25%%)")
     args = ap.parse_args()
 
-    baselines = {"engine": args.baseline, "serve": args.serve_baseline}
+    baselines = {"engine": args.baseline, "serve": args.serve_baseline,
+                 "train": args.train_baseline}
     base: dict[str, dict[tuple, dict]] = {}
     for group, path in baselines.items():
         if path.exists():
@@ -102,8 +114,9 @@ def main() -> None:
     for key, cell in sorted(new.items(), key=lambda kv: str(kv[0])):
         _, metric, group = row_key_metric(cell)
         seen_groups.add(group)
-        if not cell.get("oracle_parity", cell.get("parity", True)):
-            warn(f"{key}: lost oracle parity")
+        if not cell.get("oracle_parity",
+                        cell.get("delta_parity", cell.get("parity", True))):
+            warn(f"{key}: lost parity")
         ref = base.get(group, {}).get(key)
         if ref is None:
             print(f"{key}: new cell (no baseline), {metric}="

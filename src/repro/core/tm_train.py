@@ -18,6 +18,15 @@ States clip to [1, 2N].  The batch update sums per-sample deltas before
 clipping — the standard data-parallel TM approximation (Abeyrathna et al.,
 "massively parallel" TM), which preserves convergence in practice and makes
 the update a single ``einsum``-shaped reduction (DP-shardable over batch).
+
+This module is the *functional reference*; :mod:`repro.engine.train`
+provides interchangeable ``TrainEngine`` backends (bit-packed SWAR clause
+eval, a fused Pallas delta kernel) that are delta-exact with it for the
+same PRNG key.  The PRNG contract that makes them exchangeable lives in
+:func:`feedback_masks` / :func:`feedback_update`: every backend splits the
+step key identically and draws uniforms of identical shapes, so the
+sampled feedback decisions are bitwise identical no matter which layout
+evaluated the clauses.
 """
 
 from __future__ import annotations
@@ -29,7 +38,8 @@ import jax.numpy as jnp
 
 from .tm import TMConfig, TMState, class_sums, clause_outputs, clause_polarity
 
-__all__ = ["train_step", "train_epoch", "evaluate"]
+__all__ = ["feedback_masks", "feedback_update", "train_step", "train_epoch",
+           "evaluate"]
 
 
 def _type_i_delta(key: jax.Array, clause: jax.Array, literals: jax.Array,
@@ -59,22 +69,30 @@ def _type_ii_delta(clause: jax.Array, literals: jax.Array,
     return ((cl == 1) & (lit == 0) & (inc == 0)).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("cfg", "boost_tpf"))
-def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
-               x_literals: jax.Array, y: jax.Array,
-               boost_tpf: bool = True) -> TMState:
-    """One batched TM update. x_literals: (B, 2F) {0,1}; y: (B,) int32."""
-    b = x_literals.shape[0]
-    c, m = cfg.n_classes, cfg.n_clauses
+def feedback_masks(cfg: TMConfig, key: jax.Array, votes: jax.Array,
+                   y: jax.Array) -> tuple:
+    """Sample everything downstream of the class sums — the PRNG contract.
+
+    votes: (B, C) int32 class sums; y: (B,) int32 labels →
+    ``(y_neg, fb_t, fb_n, k_i1, k_i2)`` where ``y_neg`` (B,) is the
+    sampled negative class (≠ y), ``fb_t``/``fb_n`` (B, M) bool are the
+    per-clause feedback activations of the target/negative class, and
+    ``k_i1``/``k_i2`` are the keys a backend must use for the target/
+    negative Type I uniform draws (shape ``(B, M, 2F)``).
+
+    Every ``TrainEngine`` backend calls this with the same key and
+    bit-identical votes, so the sampled decisions — and therefore the
+    summed deltas — are bitwise identical across backends.
+    """
+    b = y.shape[0]
+    m = cfg.n_clauses
     k_neg, k_fb, k_i = jax.random.split(key, 3)
 
-    clauses = clause_outputs(cfg, state, x_literals)          # (B, C, M)
-    votes = class_sums(cfg, clauses)                          # (B, C)
     v = jnp.clip(votes, -cfg.T, cfg.T).astype(jnp.float32)
 
     # sample a negative class != y per sample
-    offs = jax.random.randint(k_neg, (b,), 1, c)
-    y_neg = (y + offs) % c
+    offs = jax.random.randint(k_neg, (b,), 1, cfg.n_classes)
+    y_neg = (y + offs) % cfg.n_classes
 
     # per-(sample, class) feedback activation probability
     p_target = (cfg.T - v[jnp.arange(b), y]) / (2.0 * cfg.T)          # (B,)
@@ -83,7 +101,27 @@ def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
     fb_t = u[:, 0] < p_target[:, None]                                 # (B, M)
     fb_n = u[:, 1] < p_neg[:, None]                                    # (B, M)
 
-    pol = clause_polarity(m)                                           # (M,)
+    k_i1, k_i2 = jax.random.split(k_i)
+    return y_neg, fb_t, fb_n, k_i1, k_i2
+
+
+def feedback_update(cfg: TMConfig, state: TMState, key: jax.Array,
+                    x_literals: jax.Array, y: jax.Array,
+                    clauses: jax.Array, votes: jax.Array,
+                    boost_tpf: bool = True) -> TMState:
+    """Shared Type I/II delta math: clause outputs + votes → new state.
+
+    clauses: (B, C, M) {0,1} clause outputs; votes: (B, C) int32 class
+    sums — however a backend computed them (dense einsum, SWAR words,
+    fused kernel), as long as they are bit-exact the resulting ``TMState``
+    is too.  Materializes the per-sample (B, M, 2F) delta tensors; the
+    ``fused`` backend replaces exactly this function with a Pallas kernel.
+    """
+    b = x_literals.shape[0]
+    c = cfg.n_classes
+    y_neg, fb_t, fb_n, k_i1, k_i2 = feedback_masks(cfg, key, votes, y)
+
+    pol = clause_polarity(cfg.n_clauses)                               # (M,)
     pos = (pol > 0)[None, :]                                           # (1, M)
 
     cl_t = clauses[jnp.arange(b), y]                                   # (B, M)
@@ -91,7 +129,6 @@ def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
     inc_t = (state.ta > cfg.n_states)[y].astype(jnp.int8)              # (B, M, 2F)
     inc_n = (state.ta > cfg.n_states)[y_neg].astype(jnp.int8)
 
-    k_i1, k_i2 = jax.random.split(k_i)
     d1_t = _type_i_delta(k_i1, cl_t, x_literals, cfg.s, boost_tpf)     # (B, M, 2F)
     d1_n = _type_i_delta(k_i2, cl_n, x_literals, cfg.s, boost_tpf)
 
@@ -118,19 +155,42 @@ def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
     return TMState(ta=ta)
 
 
-@partial(jax.jit, static_argnames=("cfg", "batch_size"))
+@partial(jax.jit, static_argnames=("cfg", "boost_tpf"))
+def train_step(cfg: TMConfig, state: TMState, key: jax.Array,
+               x_literals: jax.Array, y: jax.Array,
+               boost_tpf: bool = True) -> TMState:
+    """One batched TM update. x_literals: (B, 2F) {0,1}; y: (B,) int32."""
+    clauses = clause_outputs(cfg, state, x_literals)          # (B, C, M)
+    votes = class_sums(cfg, clauses)                          # (B, C)
+    return feedback_update(cfg, state, key, x_literals, y, clauses, votes,
+                           boost_tpf)
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch_size", "backend"))
 def train_epoch(cfg: TMConfig, state: TMState, key: jax.Array,
                 x_literals: jax.Array, y: jax.Array,
-                batch_size: int = 32) -> TMState:
-    """Scan over minibatches (drops the ragged tail)."""
+                batch_size: int = 32, backend: str | None = None) -> TMState:
+    """Scan over minibatches (drops the ragged tail).
+
+    ``backend`` selects a :mod:`repro.engine.train` ``TrainEngine`` by
+    name (``"reference"``, ``"packed"``, ``"fused"``); ``None`` runs the
+    in-module reference step directly.  All backends are delta-exact for
+    the same key, so the knob is purely a performance decision.
+    """
     n = (x_literals.shape[0] // batch_size) * batch_size
     xb = x_literals[:n].reshape(-1, batch_size, x_literals.shape[-1])
     yb = y[:n].reshape(-1, batch_size)
     keys = jax.random.split(key, xb.shape[0])
 
+    if backend is None:
+        step = partial(train_step, cfg)
+    else:
+        from repro.engine.train import get_train_engine
+        step = get_train_engine(backend, cfg).step
+
     def body(st, inp):
         k, xi, yi = inp
-        return train_step(cfg, st, k, xi, yi), None
+        return step(st, k, xi, yi), None
 
     state, _ = jax.lax.scan(body, state, (keys, xb, yb))
     return state

@@ -1,8 +1,10 @@
-"""One backend-dispatched inference path for popcount + argmax.
+"""Backend-dispatched engines: inference (VoteEngine) + training (TrainEngine).
 
->>> from repro.engine import get_engine
+>>> from repro.engine import get_engine, get_train_engine
 >>> eng = get_engine("mxu_fused", cfg, state)   # or oracle / adder_tree /
 >>> eng.infer(literals).prediction              #   swar_packed / time_domain
+>>> trainer = get_train_engine("fused", cfg)    # or reference / packed
+>>> state = trainer.step(state, key, literals, labels)
 """
 
 from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
@@ -10,10 +12,18 @@ from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
                    get_engine, infer_padded, pad_batch, register_backend)
 from . import backends  # noqa: F401  (registers the built-in backends)
 from .sharding import ShardedEngine
+from .train import (DEFAULT_TRAIN_BACKEND, TrainEngine,
+                    available_train_backends, clear_train_engine_cache,
+                    get_train_engine, register_train_backend,
+                    train_engine_cache_info)
 
-__all__ = ["DEFAULT_BACKEND", "EngineResult", "VoteEngine", "ShardedEngine",
-           "available_backends", "clear_engine_cache", "engine_cache_info",
-           "get_engine", "infer_padded", "pad_batch", "register_backend",
+__all__ = ["DEFAULT_BACKEND", "DEFAULT_TRAIN_BACKEND", "EngineResult",
+           "VoteEngine", "TrainEngine", "ShardedEngine",
+           "available_backends", "available_train_backends",
+           "clear_engine_cache", "clear_train_engine_cache",
+           "engine_cache_info", "train_engine_cache_info",
+           "get_engine", "get_train_engine", "infer_padded", "pad_batch",
+           "register_backend", "register_train_backend",
            "engine_from_model_config"]
 
 

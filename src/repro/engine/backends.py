@@ -63,7 +63,7 @@ from .sparse import ell_from_include, sparse_clause_words
 
 __all__ = ["OracleEngine", "AdderTreeEngine", "SwarPackedEngine",
            "SwarFusedEngine", "SparseCSREngine", "MXUFusedEngine",
-           "TimeDomainEngine"]
+           "TimeDomainEngine", "swar_clauses_votes"]
 
 
 def _clause_bits(inc: jax.Array, literals: jax.Array) -> jax.Array:
@@ -93,14 +93,32 @@ def _adder_tree_infer(inc, pol, literals):
     return EngineResult(argmax_tournament(sums), sums, {})
 
 
-@functools.partial(jax.jit, static_argnames=("c", "m"))
-def _swar_infer(inc_words, pos_mask, neg_mask, literals, *, c, m):
+def swar_clauses_votes(inc_words, pos_mask, neg_mask, literals, *, c, m):
+    """The SWAR word body shared by inference and training.
+
+    inc_words (C·M, Wl) uint32 packed include masks; pos_mask/neg_mask
+    (Wm,) uint32 packed clause polarities; literals (B, 2F) {0,1} →
+    (clauses (B, C, M) int8, votes (B, C) int32), bit-exact with the
+    dense oracle: a clause fires iff ``include_word & ~literal_word == 0``
+    for every word, votes are polarity-masked SWAR popcounts of the
+    repacked clause words.  One implementation on purpose — the
+    ``swar_packed`` backend and ``PackedTrainEngine``/``FusedTrainEngine``
+    all inherit their parity from this body.
+    """
     not_words = pack_bits((1 - literals).astype(jnp.int8))       # (B, Wl)
     hit = inc_words[None, :, :] & not_words[:, None, :]          # (B, CM, Wl)
-    clauses = jnp.all(hit == 0, axis=-1).reshape(-1, c, m)       # (B, C, M)
-    words = pack_bits(clauses.astype(jnp.int8))                  # (B, C, Wm)
-    sums = (popcount_swar(words & pos_mask) -
-            popcount_swar(words & neg_mask))
+    clauses = jnp.all(hit == 0, axis=-1).reshape(-1, c, m) \
+        .astype(jnp.int8)                                        # (B, C, M)
+    words = pack_bits(clauses)                                   # (B, C, Wm)
+    votes = (popcount_swar(words & pos_mask) -
+             popcount_swar(words & neg_mask))
+    return clauses, votes
+
+
+@functools.partial(jax.jit, static_argnames=("c", "m"))
+def _swar_infer(inc_words, pos_mask, neg_mask, literals, *, c, m):
+    _, sums = swar_clauses_votes(inc_words, pos_mask, neg_mask, literals,
+                                 c=c, m=m)
     return EngineResult(argmax_tournament(sums), sums, {})
 
 
@@ -161,6 +179,7 @@ class OracleEngine:
         self._pol = clause_polarity(cfg.n_clauses)               # (M,) ±1
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult` (bit-exact)."""
         return self._infer(self._inc, self._pol, literals)
 
 
@@ -196,6 +215,7 @@ class SwarPackedEngine:
         self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult` (bit-exact)."""
         return _swar_infer(self._inc_words, self._pos_mask, self._neg_mask,
                            literals, c=self.cfg.n_classes,
                            m=self.cfg.n_clauses)
@@ -221,6 +241,7 @@ class SwarFusedEngine:
         self._blocks = (block_b, block_cm)
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult` (bit-exact)."""
         return _swar_fused_infer(self._inc_words, self._vm, literals,
                                  block_b=self._blocks[0],
                                  block_cm=self._blocks[1],
@@ -246,6 +267,7 @@ class SparseCSREngine:
         self._pol = clause_polarity(cfg.n_clauses)
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult` (bit-exact)."""
         return _sparse_csr_infer(self.ell.indices, self._pol, literals,
                                  c=self.cfg.n_classes,
                                  m=self.cfg.n_clauses)
@@ -265,6 +287,7 @@ class MXUFusedEngine:
         self._blocks = (block_b, block_cm)
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult` (bit-exact)."""
         return _mxu_infer(self._inc, self._vm, literals,
                           block_b=self._blocks[0], block_cm=self._blocks[1],
                           interpret=not on_tpu())
@@ -299,6 +322,8 @@ class TimeDomainEngine:
         self._n_neg = cfg.n_clauses // 2        # odd-index (opposing) clauses
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult`; ``aux`` carries
+        per-sample ``latency_ps`` (f32) and ``metastable`` (bool)."""
         return _time_domain_infer(self._inc, self._pol, self.device,
                                   self.noise_key, literals, pdl=self.pdl,
                                   n_neg=self._n_neg)

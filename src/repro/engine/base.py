@@ -59,7 +59,8 @@ import numpy as np
 
 from repro.core.tm import TMConfig, TMState
 
-__all__ = ["EngineResult", "VoteEngine", "register_backend", "get_engine",
+__all__ = ["EngineResult", "VoteEngine", "Registry", "KeyedEngineCache",
+           "register_backend", "get_engine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
            "pad_batch", "infer_padded", "DEFAULT_BACKEND"]
 
@@ -68,6 +69,8 @@ ENGINE_CACHE_SIZE = 16
 
 
 class EngineResult(NamedTuple):
+    """What every inference backend returns (all arrays batch-leading)."""
+
     prediction: jax.Array           # (B,) int32 — argmax class (ties → lowest)
     class_sums: jax.Array           # (B, C) int32 — signed vote counts
     aux: dict[str, jax.Array]       # backend extras; each array batch-leading
@@ -85,45 +88,135 @@ class VoteEngine(Protocol):
         ...
 
 
-_REGISTRY: dict[str, Callable[..., VoteEngine]] = {}
+class Registry:
+    """String-keyed backend factory registry.
+
+    One instance per engine family — the :class:`VoteEngine` inference
+    registry here and the ``TrainEngine`` registry in
+    :mod:`repro.engine.train` share this machinery, so backend choice is
+    a config knob on both paths.  ``kind`` names the family in error
+    messages (e.g. ``"VoteEngine"``).
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self.factories: dict[str, Callable] = {}
+
+    def register(self, name: str):
+        """Class decorator: register a backend factory under ``name``."""
+        def deco(factory):
+            self.factories[name] = factory
+            factory.name = name
+            return factory
+        return deco
+
+    def names(self) -> list[str]:
+        """Sorted names of all registered backends."""
+        return sorted(self.factories)
+
+    def build(self, name: str, *args, **opts):
+        """Instantiate the named backend, ``KeyError`` on unknown names."""
+        if name not in self.factories:
+            raise KeyError(f"unknown {self.kind} backend {name!r}; "
+                           f"available: {self.names()}")
+        return self.factories[name](*args, **opts)
+
+
+class KeyedEngineCache:
+    """Thread-safe keyed LRU of built engines, weakref-pinned to state.
+
+    Entries map a hashable key → (weakrefs to the key's state arrays,
+    engine); an ``OrderedDict`` provides LRU order.  The weakref death
+    callbacks evict an entry the moment any of its state arrays is
+    garbage-collected, which (a) keeps id-based state identity sound — an
+    id can only be recycled after the old array died, and by then its
+    entry is gone — and (b) means the cache never retains dead states: a
+    training loop predicting with a fresh state per step frees each old
+    state's layout as soon as the caller drops it.
+
+    Guarded by an RLock (not Lock): gc can run a weakref eviction
+    callback on the thread that already holds the lock (e.g. while
+    inserting triggers a collection), and a serving process hits the
+    cache from scheduler/executor threads concurrently — the bare
+    ``OrderedDict`` check-then-act sequences (``in`` → ``move_to_end``,
+    ``len`` → ``popitem``) race without one.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._data: OrderedDict[tuple, tuple] = OrderedDict()
+        self._stats = {"hits": 0, "misses": 0}
+        self._lock = threading.RLock()
+
+    def get(self, key):
+        """The cached engine for ``key`` (marking it most-recent), or None."""
+        with self._lock:
+            hit = self._data.get(key)
+            if hit is None:
+                return None
+            self._data.move_to_end(key)
+            self._stats["hits"] += 1
+            return hit[1]
+
+    def insert(self, key, state, engine) -> None:
+        """Cache ``engine`` under ``key``, pinned to ``state``'s arrays.
+
+        Holds only weakrefs to the arrays (self-evicting, see class
+        docstring); a non-weakreferenceable leaf pins the array instead.
+        Evicts least-recently-used entries past ``maxsize``.
+        """
+        def _evict(_ref, _key=key):
+            with self._lock:
+                self._data.pop(_key, None)
+
+        try:
+            refs = tuple(weakref.ref(a, _evict) for a in state)
+        except TypeError:       # non-weakreferenceable leaf: pin instead
+            refs = tuple(state)
+        with self._lock:
+            self._stats["misses"] += 1
+            self._data[key] = (refs, engine)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        """Drop every cached engine and reset the hit/miss counters."""
+        with self._lock:
+            self._data.clear()
+            self._stats["hits"] = self._stats["misses"] = 0
+
+    def info(self) -> dict:
+        """``{"size", "maxsize", "hits", "misses"}`` of this cache."""
+        with self._lock:
+            return {"size": len(self._data), "maxsize": self.maxsize,
+                    **self._stats}
+
+
+_VOTE_REGISTRY = Registry("VoteEngine")
+_REGISTRY = _VOTE_REGISTRY.factories      # back-compat alias (autotune, tests)
+_ENGINE_CACHE = KeyedEngineCache(ENGINE_CACHE_SIZE)
 
 
 def register_backend(name: str):
     """Class decorator: register a ``VoteEngine`` factory under ``name``."""
-    def deco(factory):
-        _REGISTRY[name] = factory
-        factory.name = name
-        return factory
-    return deco
+    return _VOTE_REGISTRY.register(name)
 
 
 def available_backends() -> list[str]:
     """Sorted names of all registered backends."""
     from . import backends  # noqa: F401  (import side effect: registration)
-    return sorted(_REGISTRY)
+    return _VOTE_REGISTRY.names()
 
 
-# key → (weakrefs to the state arrays, engine); OrderedDict as LRU.  The
-# weakref death callbacks evict the entry the moment any of its state
-# arrays is garbage-collected, which (a) keeps id-based state identity
-# sound — an id can only be recycled after the old array died, and by then
-# its entry is gone — and (b) means the cache never retains dead states:
-# a training loop predicting with a fresh state per step frees each old
-# state's layout as soon as the caller drops it.
-_ENGINE_CACHE: OrderedDict[tuple, tuple] = OrderedDict()
-_CACHE_STATS = {"hits": 0, "misses": 0}
-# RLock, not Lock: gc can run a weakref eviction callback on the thread
-# that already holds the lock (e.g. while inserting triggers a collection)
-_CACHE_LOCK = threading.RLock()
-
-
-def _cache_key(name, cfg, state, shard_batch, donate_literals, opts):
+def _cache_key(name, cfg, state, opts, *flags):
     """Hashable cache key, or ``None`` when opts aren't cacheable
-    (e.g. a ``PDLDevice`` of arrays or a ``noise_key``)."""
+    (e.g. a ``PDLDevice`` of arrays or a ``noise_key``).  ``state`` is
+    the engine family's state pytree leaves (empty for train engines,
+    which rebuild their layout from the state passed to each step)."""
     try:
         opts_key = tuple(sorted(opts.items()))
         state_key = tuple((id(a), a.shape, str(a.dtype)) for a in state)
-        key = (name, cfg, state_key, shard_batch, donate_literals, opts_key)
+        key = (name, cfg, state_key, flags, opts_key)
         hash(key)
     except TypeError:
         return None
@@ -132,16 +225,12 @@ def _cache_key(name, cfg, state, shard_batch, donate_literals, opts):
 
 def clear_engine_cache() -> None:
     """Drop every cached engine."""
-    with _CACHE_LOCK:
-        _ENGINE_CACHE.clear()
-        _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    _ENGINE_CACHE.clear()
 
 
 def engine_cache_info() -> dict:
     """``{"size", "maxsize", "hits", "misses"}`` of the engine cache."""
-    with _CACHE_LOCK:
-        return {"size": len(_ENGINE_CACHE), "maxsize": ENGINE_CACHE_SIZE,
-                **_CACHE_STATS}
+    return _ENGINE_CACHE.info()
 
 
 class DonatingEngine:
@@ -164,6 +253,7 @@ class DonatingEngine:
         self._jit = jax.jit(inner.infer, donate_argnums=0)
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """``inner.infer`` through the donating jit (same contract)."""
         import warnings
         with warnings.catch_warnings():
             warnings.filterwarnings(
@@ -192,49 +282,29 @@ def get_engine(name: str, cfg: TMConfig, state: TMState, *,
     buffer to XLA; only safe if callers never reuse a batch after the call.
     """
     from . import backends  # noqa: F401  (import side effect: registration)
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown VoteEngine backend {name!r}; "
-                       f"available: {available_backends()}")
-
     from . import autotune
     for opt, val in autotune.lookup(name, cfg).items():
         opts.setdefault(opt, val)
 
-    key = _cache_key(name, cfg, state, shard_batch, donate_literals, opts) \
+    key = _cache_key(name, cfg, state, opts, shard_batch, donate_literals) \
         if cache else None
     if key is not None:
-        with _CACHE_LOCK:
-            hit = _ENGINE_CACHE.get(key)
-            if hit is not None:
-                _ENGINE_CACHE.move_to_end(key)
-                _CACHE_STATS["hits"] += 1
-                return hit[1]
+        hit = _ENGINE_CACHE.get(key)
+        if hit is not None:
+            return hit
 
     # build outside the lock: layout precompile can take milliseconds and
     # must not serialize unrelated threads.  Two threads missing on the
     # same key both build; the second insert wins — benign, both engines
     # are equivalent.
-    engine = _REGISTRY[name](cfg, state, **opts)
+    engine = _VOTE_REGISTRY.build(name, cfg, state, **opts)
     if shard_batch:
         from .sharding import ShardedEngine
         engine = ShardedEngine(engine)
     if donate_literals:
         engine = DonatingEngine(engine)
     if key is not None:
-
-        def _evict(_ref, _key=key):
-            with _CACHE_LOCK:
-                _ENGINE_CACHE.pop(_key, None)
-
-        try:
-            refs = tuple(weakref.ref(a, _evict) for a in state)
-        except TypeError:       # non-weakreferenceable leaf: pin instead
-            refs = tuple(state)
-        with _CACHE_LOCK:
-            _CACHE_STATS["misses"] += 1
-            _ENGINE_CACHE[key] = (refs, engine)
-            while len(_ENGINE_CACHE) > ENGINE_CACHE_SIZE:
-                _ENGINE_CACHE.popitem(last=False)
+        _ENGINE_CACHE.insert(key, state, engine)
     return engine
 
 

@@ -46,6 +46,8 @@ class ShardedEngine:
             in_specs=P("batch"), out_specs=P("batch"), check_rep=False)
 
     def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) literals → the inner engine's result, batch-sharded
+        across local devices (ragged batches pad + slice transparently)."""
         b = literals.shape[0]
         bp = -(-b // self.n_devices) * self.n_devices
         if bp != b:

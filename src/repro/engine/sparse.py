@@ -52,10 +52,12 @@ class EllLayout(NamedTuple):
 
     @property
     def k_max(self) -> int:
+        """Padded row width K = max includes over all clause rows."""
         return self.indices.shape[1]
 
     @property
     def density(self) -> float:
+        """Mean include fraction (≈0.05 for trained machines)."""
         if self.n_literals == 0:
             return 0.0
         return float(np.asarray(self.nnz).mean()) / self.n_literals

@@ -1,0 +1,285 @@
+"""TrainEngine: one backend-dispatched TM training path.
+
+The inference registry (:mod:`repro.engine.base`) made popcount+argmax a
+config knob; this module does the same for the *training* step, so a
+production system can learn while it serves (Prescott et al., "An FPGA
+Architecture for Online Learning using the Tsetlin Machine") with the
+data-parallel batch update of Abeyrathna et al. ("Massively Parallel and
+Asynchronous Tsetlin Machine Architecture") running on whichever layout
+is fastest for the deployment target:
+
+- :class:`TrainEngine` — the protocol: ``step(state, key, literals,
+  labels) -> TMState``.
+- a string-keyed registry (:func:`register_train_backend`,
+  :func:`get_train_engine`, :func:`available_train_backends`) built on
+  the same :class:`repro.engine.base.Registry` /
+  :class:`repro.engine.base.KeyedEngineCache` machinery as inference.
+
+Unlike inference engines, train engines precompile **no state-derived
+layout** — the state changes on every step, so anything derived from it
+(packed include words, clause layouts) is rebuilt inside the jitted step
+and the keyed LRU cache keys on (backend, cfg, opts) only.
+
+Delta-exactness contract: every backend consumes the step key through
+:func:`repro.core.tm_train.feedback_masks` (identical splits, identical
+uniform shapes) and computes bit-identical clause outputs and class sums,
+so for a fixed PRNG key all backends return bitwise-identical new states
+(property-tested in ``tests/test_train_engine.py``).  Switching backends
+is purely a performance decision, exactly like inference.
+
+======================  ====================================================
+``reference``           wraps :func:`repro.core.tm_train.train_step` — the
+                        dense einsum formulation, the functional oracle.
+``packed``              bit-packed literals + SWAR clause evaluation (the
+                        ``swar_packed`` inference layout) feeding the
+                        shared feedback math — clause eval as word-ANDs.
+``fused``               SWAR-fused class sums plus a Pallas kernel
+                        (``train_deltas_pallas``) fusing addressed-class
+                        clause eval + Type I/II delta generation + the
+                        per-class scatter, so no per-sample delta tensor
+                        ever materializes in HBM.
+======================  ====================================================
+
+``fused`` takes ``block_b``/``block_m`` tile opts; when not given
+explicitly, :func:`get_train_engine` consults the autotune cache (key
+``train:fused|C|M|L|device``) before falling back to the defaults.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.popcount import pack_bits
+from repro.core.tm import TMConfig, TMState, clause_polarity
+from repro.core.tm_train import feedback_masks, feedback_update, train_step
+from repro.kernels.clause_eval import make_vote_matrix
+from repro.kernels.ops import on_tpu
+from repro.kernels.swar_fused import swar_fused_votes_pallas
+from repro.kernels.train_fused import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_M,
+                                       train_deltas)
+
+from .backends import swar_clauses_votes
+from .base import KeyedEngineCache, Registry, _cache_key
+
+__all__ = ["TrainEngine", "register_train_backend", "get_train_engine",
+           "available_train_backends", "clear_train_engine_cache",
+           "train_engine_cache_info", "DEFAULT_TRAIN_BACKEND",
+           "ReferenceTrainEngine", "PackedTrainEngine", "FusedTrainEngine"]
+
+DEFAULT_TRAIN_BACKEND = "reference"
+TRAIN_ENGINE_CACHE_SIZE = 8
+
+
+@runtime_checkable
+class TrainEngine(Protocol):
+    """A built training engine for one clause geometry (cfg, not state)."""
+
+    name: str
+    cfg: TMConfig
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One batched update: (B, 2F) {0,1} literals + (B,) int32 labels
+        → the new ``TMState`` (states clipped to [1, 2N])."""
+        ...
+
+
+_TRAIN_REGISTRY = Registry("TrainEngine")
+_TRAIN_CACHE = KeyedEngineCache(TRAIN_ENGINE_CACHE_SIZE)
+
+
+def register_train_backend(name: str):
+    """Class decorator: register a ``TrainEngine`` factory under ``name``."""
+    return _TRAIN_REGISTRY.register(name)
+
+
+def available_train_backends() -> list[str]:
+    """Sorted names of all registered training backends."""
+    return _TRAIN_REGISTRY.names()
+
+
+def clear_train_engine_cache() -> None:
+    """Drop every cached training engine."""
+    _TRAIN_CACHE.clear()
+
+
+def train_engine_cache_info() -> dict:
+    """``{"size", "maxsize", "hits", "misses"}`` of the train-engine cache."""
+    return _TRAIN_CACHE.info()
+
+
+def get_train_engine(name: str, cfg: TMConfig, *, cache: bool = True,
+                     **opts) -> TrainEngine:
+    """Build (or fetch from cache) the named training backend's engine.
+
+    Extra ``opts`` are forwarded to the backend constructor (e.g.
+    ``boost_tpf=False``, or ``block_b``/``block_m`` tiles for ``fused``).
+    Tunable backends whose tile opts are not given explicitly get them
+    from the autotune cache (:mod:`repro.engine.autotune`, keyed
+    ``train:<name>``) when an entry for this shape exists.
+
+    ``cache=True`` (default) memoizes built engines by (backend, cfg,
+    options) in a small keyed LRU — no state in the key, because train
+    engines derive nothing from the state at build time (the state is a
+    per-step argument).
+    """
+    from . import autotune
+    for opt, val in autotune.lookup(f"train:{name}", cfg).items():
+        opts.setdefault(opt, val)
+
+    key = _cache_key(name, cfg, (), opts) if cache else None
+    if key is not None:
+        hit = _TRAIN_CACHE.get(key)
+        if hit is not None:
+            return hit
+    engine = _TRAIN_REGISTRY.build(name, cfg, **opts)
+    if key is not None:
+        _TRAIN_CACHE.insert(key, (), engine)
+    return engine
+
+
+def _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask):
+    """SWAR clause eval + class sums on the bit-packed word layout.
+
+    Packs include words from the live state, then delegates to the one
+    shared word body (:func:`repro.engine.backends.swar_clauses_votes`)
+    so training inherits the inference backends' bit-exactness.
+    x: (B, 2F) {0,1} literals → (clauses (B, C, M) int8, votes (B, C)
+    int32).
+    """
+    c, m = cfg.n_classes, cfg.n_clauses
+    inc = (state.ta > cfg.n_states).astype(jnp.int8)
+    inc_words = pack_bits(inc.reshape(c * m, cfg.n_literals))    # (CM, Wl)
+    return swar_clauses_votes(inc_words, pos_mask, neg_mask, x, c=c, m=m)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "boost_tpf"))
+def _packed_step(cfg, state, key, x, y, pos_mask, neg_mask, *, boost_tpf):
+    clauses, votes = _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask)
+    return feedback_update(cfg, state, key, x, y, clauses, votes,
+                           boost_tpf=boost_tpf)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "boost_tpf", "block_b",
+                                             "block_m", "interpret"))
+def _fused_step(cfg, state, key, x, y, vm, pos_mask, neg_mask, *, boost_tpf,
+                block_b, block_m, interpret):
+    b = x.shape[0]
+    c, m = cfg.n_classes, cfg.n_clauses
+    inc8 = (state.ta > cfg.n_states).astype(jnp.int8)            # (C, M, L)
+    if interpret:
+        # CPU: SWAR word votes as straight-line XLA (the vote kernel's
+        # interpreter overhead outweighs its fusion win off-TPU)
+        _, votes = _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask)
+    else:
+        inc_words = pack_bits(inc8.reshape(c * m, cfg.n_literals))
+        not_words = pack_bits((1 - x).astype(jnp.int8))
+        votes = swar_fused_votes_pallas(not_words, inc_words, vm,
+                                        interpret=False)         # (B, C)
+
+    y_neg, fb_t, fb_n, k_i1, k_i2 = feedback_masks(cfg, key, votes, y)
+    # the raw words jax.random.uniform would float-convert — the kernel
+    # compares them against exact integer thresholds instead
+    bits1 = jax.random.bits(k_i1, (b, m, cfg.n_literals), jnp.uint32)
+    bits2 = jax.random.bits(k_i2, (b, m, cfg.n_literals), jnp.uint32)
+
+    pos = (clause_polarity(m) > 0)[None, :]                      # (1, M)
+    # target class: Type I on + clauses, Type II on −; negative class swaps
+    m1_t = fb_t & pos
+    m2_t = fb_t & ~pos
+    m1_n = fb_n & ~pos
+    m2_n = fb_n & pos
+
+    p_inc = 1.0 if boost_tpf else (cfg.s - 1.0) / cfg.s
+    upd = train_deltas(x, bits1, bits2, inc8[y], inc8[y_neg],
+                       m1_t, m2_t, m1_n, m2_n, y, y_neg,
+                       n_classes=c, p_inc=p_inc, p_dec=1.0 / cfg.s,
+                       block_b=block_b, block_m=block_m,
+                       interpret=interpret)
+    ta = jnp.clip(state.ta + upd, 1, 2 * cfg.n_states)
+    return TMState(ta=ta)
+
+
+@register_train_backend("reference")
+class ReferenceTrainEngine:
+    """Wraps :func:`repro.core.tm_train.train_step` — the dense oracle."""
+
+    def __init__(self, cfg: TMConfig, *, boost_tpf: bool = True):
+        self.cfg = cfg
+        self.boost_tpf = boost_tpf
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One reference update (see :class:`TrainEngine`)."""
+        return train_step(self.cfg, state, key, x_literals, y,
+                          boost_tpf=self.boost_tpf)
+
+
+@register_train_backend("packed")
+class PackedTrainEngine:
+    """Bit-packed SWAR clause eval feeding the shared feedback math.
+
+    Clause evaluation and class sums run on the ``swar_packed`` inference
+    layout — include masks and literals as uint32 words, clause outputs
+    from word-ANDs, votes from polarity-masked SWAR popcounts — and the
+    bit-exact clause/vote bits then drive the reference delta math
+    (:func:`repro.core.tm_train.feedback_update`).  Build time packs only
+    the state-independent polarity masks; include words repack from the
+    live state inside the jitted step.
+    """
+
+    def __init__(self, cfg: TMConfig, *, boost_tpf: bool = True):
+        self.cfg = cfg
+        self.boost_tpf = boost_tpf
+        pol = clause_polarity(cfg.n_clauses)
+        self._pos_mask = pack_bits((pol > 0).astype(jnp.int8))   # (Wm,)
+        self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One packed-layout update (see :class:`TrainEngine`)."""
+        return _packed_step(self.cfg, state, key, x_literals, y,
+                            self._pos_mask, self._neg_mask,
+                            boost_tpf=self.boost_tpf)
+
+
+@register_train_backend("fused")
+class FusedTrainEngine:
+    """Fused training: per-sample deltas never materialize in HBM.
+
+    Class sums come from the SWAR word layout (the ``swar_fused``
+    inference kernel on TPU, its straight-line XLA twin on CPU); the
+    feedback masks and raw Type I uniform words are sampled via the
+    shared PRNG contract; then the fused delta computation
+    (``repro.kernels.train_fused.train_deltas``) does addressed-class
+    clause eval + Type I/II delta generation + a class-free segment-sum
+    scatter in one pass, so the six per-sample ``(B, M, 2F)`` delta
+    tensors of the reference are never written out.  ``block_b`` /
+    ``block_m`` tile the Pallas kernel path and are autotunable
+    (autotune key ``train:fused``).
+    """
+
+    def __init__(self, cfg: TMConfig, *, boost_tpf: bool = True,
+                 block_b: int = DEFAULT_BLOCK_B,
+                 block_m: int = DEFAULT_BLOCK_M):
+        self.cfg = cfg
+        self.boost_tpf = boost_tpf
+        self._vm = make_vote_matrix(cfg.n_classes, cfg.n_clauses)
+        pol = clause_polarity(cfg.n_clauses)
+        self._pos_mask = pack_bits((pol > 0).astype(jnp.int8))   # (Wm,)
+        self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
+        self._blocks = (block_b, block_m)
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One fused-kernel update (see :class:`TrainEngine`)."""
+        return _fused_step(self.cfg, state, key, x_literals, y, self._vm,
+                           self._pos_mask, self._neg_mask,
+                           boost_tpf=self.boost_tpf,
+                           block_b=self._blocks[0],
+                           block_m=self._blocks[1],
+                           interpret=not on_tpu())

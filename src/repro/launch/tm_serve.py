@@ -10,10 +10,18 @@ queue depth, batch fill, and p50/p99 latency.
     PYTHONPATH=src python -m repro.launch.tm_serve --clients 64 --duration 5
     PYTHONPATH=src python -m repro.launch.tm_serve --backend sparse_csr \
         --max-batch 128 --max-wait-us 500
+    PYTHONPATH=src python -m repro.launch.tm_serve --train-backend fused \
+        --label-rate 20 --label-batch 32        # serve + learn concurrently
 
 Backpressure is visible live: at arrival rates beyond engine throughput,
 ``qdepth`` pins at ``--queue-depth`` and open-loop arrivals block in
 ``submit`` instead of growing an unbounded backlog.
+
+``--train-backend`` opts into online learning: a label feeder submits
+``--label-rate`` labeled batches per second (labels from a fixed random
+"teacher" TM, so the served machine genuinely adapts) interleaved with
+the predict traffic, and the stats line shows the state version climbing
+while predict latency stays bounded.
 """
 
 from __future__ import annotations
@@ -38,6 +46,7 @@ def build_tm(c: int, m: int, f: int, *, density: float, seed: int):
 
 
 async def _stats_printer(server, every: float) -> None:
+    """Print one live stats line per ``every`` seconds until cancelled."""
     t0 = time.monotonic()
     prev = 0
     while True:
@@ -45,12 +54,42 @@ async def _stats_printer(server, every: float) -> None:
         s = server.stats()
         rps = (s["requests"] - prev) / every
         prev = s["requests"]
+        learn = (f"  ver={s['state_version']}" if s["updates"] or
+                 s["state_version"] else "")
         print(f"[t+{time.monotonic() - t0:5.1f}s] {rps:8.0f} req/s  "
               f"qdepth={s['qdepth']:4d}  "
               f"fill={s['batch_fill']:.2f}  "
               f"mean_batch={s['mean_batch_rows']:.1f}  "
-              f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms",
+              f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms{learn}",
               flush=True)
+
+
+async def _label_feeder(server, pool, labels, *, rate: float, batch: int,
+                        rng) -> None:
+    """Offer ``rate`` labeled batches/s (Poisson) until cancelled.
+
+    Fire-and-forget: awaiting each update would cap the offered rate at
+    update throughput; instead pending futures accumulate against the
+    server's bounded queue (backpressure), like open-loop predicts.
+    """
+    pending: set[asyncio.Task] = set()
+    next_t = time.monotonic()
+    while True:
+        next_t += rng.exponential(1.0 / rate)
+        delay = next_t - time.monotonic()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        rows = rng.integers(0, len(pool), batch)
+        task = asyncio.ensure_future(
+            server.submit_labeled(pool[rows], labels[rows]))
+        pending.add(task)
+
+        def _done(t: asyncio.Task) -> None:
+            pending.discard(t)
+            if not t.cancelled():
+                t.exception()       # retrieve: no 'never retrieved' noise
+
+        task.add_done_callback(_done)
 
 
 async def _run(args) -> None:
@@ -65,17 +104,37 @@ async def _run(args) -> None:
     rng = np.random.default_rng(args.seed + 1)
     pool = rng.integers(0, 2, (4096, cfg.n_literals), dtype=np.int8)
 
-    async with TMServer(cfg, state, policy) as server:
+    labels = None
+    if args.train_backend:
+        # labels from a fixed random "teacher" machine: the served TM has
+        # something consistent to adapt toward while it serves
+        import jax.numpy as jnp
+        from repro.engine import get_engine
+        _, teacher = build_tm(args.classes, args.clauses, args.features,
+                              density=args.density, seed=args.seed + 2)
+        labels = np.asarray(get_engine("oracle", cfg, teacher)
+                            .infer(jnp.asarray(pool)).prediction)
+
+    async with TMServer(cfg, state, policy,
+                        train_backend=args.train_backend or None,
+                        train_seed=args.seed) as server:
         print(f"TM C={cfg.n_classes} M={cfg.n_clauses} F={cfg.n_features} "
               f"density={args.density}  buckets={server.buckets}")
         print(f"routing: {server.stats()['routing']}")
         t0 = time.monotonic()
-        await server.warmup()
+        await server.warmup(train_batches=(args.label_batch,)
+                            if args.train_backend else ())
         print(f"warmup: {len(server.buckets)} buckets compiled in "
               f"{time.monotonic() - t0:.2f}s")
 
         printer = asyncio.ensure_future(
             _stats_printer(server, args.stats_every))
+        feeder = None
+        if args.train_backend:
+            feeder = asyncio.ensure_future(
+                _label_feeder(server, pool, labels, rate=args.label_rate,
+                              batch=args.label_batch,
+                              rng=np.random.default_rng(args.seed + 3)))
         t0 = time.monotonic()
         if args.clients:
             served = await closed_loop(server, pool,
@@ -86,14 +145,19 @@ async def _run(args) -> None:
                                      duration=args.duration, rng=rng)
         wall = time.monotonic() - t0
         printer.cancel()
+        if feeder is not None:
+            feeder.cancel()
 
         s = server.stats()
         mode = (f"closed-loop x{args.clients}" if args.clients
                 else f"open-loop {args.rate:.0f}/s")
+        learn = (f"  state_version={s['state_version']} "
+                 f"({s['update_rows']} labeled rows)"
+                 if args.train_backend else "")
         print(f"\n{mode}: {served} requests in {wall:.2f}s "
               f"({served / wall:,.0f} req/s)  "
               f"batches={s['batches']}  fill={s['batch_fill']:.2f}  "
-              f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms")
+              f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms{learn}")
 
 
 def main() -> None:
@@ -108,6 +172,13 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-us", type=int, default=2000)
     ap.add_argument("--queue-depth", type=int, default=1024)
+    ap.add_argument("--train-backend", default=None,
+                    help="TrainEngine name (reference/packed/fused): serve "
+                         "and learn concurrently from a label feeder")
+    ap.add_argument("--label-rate", type=float, default=10.0,
+                    help="labeled feedback batches per second")
+    ap.add_argument("--label-batch", type=int, default=32,
+                    help="rows per labeled feedback batch")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="open-loop Poisson arrival rate (req/s)")
     ap.add_argument("--clients", type=int, default=0,

@@ -3,7 +3,9 @@
 ``repro.serve.decode`` is the LM-side greedy decode; ``tm_server`` is the
 paper-side production path — an async micro-batcher that coalesces
 predict requests into shape-bucketed, padded batches over the VoteEngine
-registry (see ``python -m repro.launch.tm_serve``).
+registry, and (opt-in) learns online from labeled feedback through the
+TrainEngine registry with versioned copy-on-write state swaps (see
+``python -m repro.launch.tm_serve`` and docs/serving.md).
 """
 
 from .loadgen import closed_loop, open_loop, percentiles_ms

@@ -23,10 +23,22 @@ throughput here comes from decoupling arrival from evaluation:
   loop keeps *accepting* requests while a batch computes.  A failing
   batch (bad routing entry, backend error) sets the exception on its own
   requests' futures only — the scheduler outlives engine errors.
+- online learning (opt-in via ``train_backend=``) — :meth:`submit_labeled`
+  enqueues labeled feedback batches into the same FIFO queue.  Updates
+  run a :mod:`repro.engine.train` ``TrainEngine`` step on the worker
+  thread and swap in the new state copy-on-write: JAX states are
+  immutable, so the swap publishes a fully-built ``(version, state)``
+  pair atomically and a predict can never observe a half-applied update.
+  Each predict is pinned to the ``(version, state)`` current *when it
+  arrived* — the batcher never mixes state versions in one batch, and
+  results stay bit-exact against the state version they arrived under
+  even while training runs concurrently.
 
->>> async with TMServer(cfg, state, ServePolicy(max_batch=64)) as srv:
+>>> async with TMServer(cfg, state, ServePolicy(max_batch=64),
+...                     train_backend="packed") as srv:
 ...     result = await srv.submit(literals)       # (n, 2F) or (2F,)
 ...     result.prediction                         # (n,) int32
+...     version = await srv.submit_labeled(literals, labels)
 """
 
 from __future__ import annotations
@@ -95,6 +107,7 @@ class ServePolicy:
     backend: str | None = None
 
     def resolved_buckets(self) -> tuple[int, ...]:
+        """The sorted, deduplicated bucket shapes this policy compiles."""
         if self.buckets is not None:
             return tuple(sorted(set(self.buckets)))
         return default_buckets(self.max_batch)
@@ -127,14 +140,30 @@ def route_buckets(cfg: TMConfig, state: TMState,
 
 
 class _Request:
-    __slots__ = ("lits", "n", "future", "t_in", "client")
+    """A queued predict, pinned to the state version current at arrival."""
 
-    def __init__(self, lits, future, client):
+    __slots__ = ("lits", "n", "future", "t_in", "client", "version", "state")
+
+    def __init__(self, lits, future, client, version, state):
         self.lits = lits
         self.n = lits.shape[0]
         self.future = future
         self.t_in = time.monotonic()
         self.client = client
+        self.version = version
+        self.state = state
+
+
+class _Update:
+    """A queued labeled feedback batch (online-learning mode)."""
+
+    __slots__ = ("lits", "labels", "future", "t_in")
+
+    def __init__(self, lits, labels, future):
+        self.lits = lits
+        self.labels = labels
+        self.future = future
+        self.t_in = time.monotonic()
 
 
 class TMServer:
@@ -145,25 +174,46 @@ class TMServer:
     awaits the request's slice of a batched ``infer``.  One scheduler
     coroutine owns coalescing; one worker thread owns JAX compute, so the
     event loop stays free to accept traffic mid-batch.
+
+    ``train_backend`` opts into online learning: :meth:`submit_labeled`
+    feeds labeled batches through the named :mod:`repro.engine.train`
+    backend, and the served state advances through immutable, versioned
+    copies (see the module docstring for the consistency contract).
+    ``train_seed`` seeds the server's update-key chain: update ``i``
+    uses ``split(chain)[1]`` with ``chain = split(chain)[0]`` advanced
+    each update, so a replay with the same seed and update order is
+    bit-identical.
     """
 
     def __init__(self, cfg: TMConfig, state: TMState,
                  policy: ServePolicy | None = None, *,
                  routing: dict[int, str] | None = None,
+                 train_backend: str | None = None, train_seed: int = 0,
                  latency_window: int = 4096):
         self.cfg = cfg
-        self.state = state
+        # (version, state): swapped as one tuple so concurrent readers
+        # (submit on the event loop, stats) always see a matched pair
+        self._current: tuple[int, TMState] = (0, state)
         self.policy = policy or ServePolicy()
         self.buckets = self.policy.resolved_buckets()
+        # routing reflects the *initial* state's include density; online
+        # updates do not re-route (measured/explicit routes still win)
         self.routing = dict(routing) if routing is not None else \
             route_buckets(cfg, state, self.buckets,
                           backend=self.policy.backend)
+        self._train_engine = None
+        self._train_key = None
+        if train_backend is not None:
+            import jax
+            from repro.engine import get_train_engine
+            self._train_engine = get_train_engine(train_backend, cfg)
+            self._train_key = jax.random.key(train_seed)
         self._queue: asyncio.Queue = asyncio.Queue(
             maxsize=self.policy.queue_depth)
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="tm-serve-infer")
         self._task: asyncio.Task | None = None
-        self._carry: _Request | None = None
+        self._carry: _Request | _Update | None = None
         self._closed = False
         self._stop_seen = False
         # stats (scheduler-coroutine-owned; read-only from stats())
@@ -173,10 +223,23 @@ class TMServer:
         self._n_batches = 0
         self._n_padded_rows = 0
         self._n_errors = 0
+        self._n_updates = 0
+        self._n_update_rows = 0
+
+    @property
+    def state(self) -> TMState:
+        """The currently served ``TMState`` (the newest applied version)."""
+        return self._current[1]
+
+    @property
+    def state_version(self) -> int:
+        """How many labeled updates have been applied (0 at start)."""
+        return self._current[0]
 
     # -- lifecycle ----------------------------------------------------
 
     async def start(self) -> "TMServer":
+        """Launch the scheduler coroutine (idempotent use is an error)."""
         if self._task is not None:
             raise RuntimeError("server already started")
         self._task = asyncio.get_running_loop().create_task(
@@ -199,14 +262,30 @@ class TMServer:
     async def __aexit__(self, *exc) -> None:
         await self.stop()
 
-    def engine_for(self, bucket: int):
-        """The (cached) engine serving this bucket."""
+    def engine_for(self, bucket: int, state: TMState | None = None):
+        """The (cached) engine serving this bucket.
+
+        ``state`` pins a specific state version (the batcher passes each
+        batch's arrival-time state); default is the newest.  Engines come
+        from ``get_engine``'s keyed LRU, so each live state version keeps
+        its own precompiled layout and retired versions self-evict when
+        their arrays are garbage-collected.
+        """
         backend = self.routing.get(bucket) or \
             self.routing.get(self.buckets[-1], "oracle")
-        return get_engine(backend, self.cfg, self.state)
+        return get_engine(backend, self.cfg,
+                          self.state if state is None else state)
 
-    async def warmup(self) -> None:
-        """Compile every (engine, bucket) pair before taking traffic."""
+    async def warmup(self, *, train_batches: tuple[int, ...] = ()) -> None:
+        """Compile every (engine, bucket) pair before taking traffic.
+
+        In online-learning mode, ``train_batches`` also compiles the
+        train step for those labeled-batch row counts (the update path
+        compiles per batch shape, exactly like predict buckets — feed
+        fixed-size labeled batches to avoid mid-traffic compiles).  The
+        warmup step's result is discarded; the served state is untouched.
+        """
+        import jax
         loop = asyncio.get_running_loop()
         zeros = np.zeros((1, self.cfg.n_literals), np.int8)
         for bucket in self.buckets:
@@ -215,6 +294,17 @@ class TMServer:
                 self._pool,
                 lambda e=eng, b=bucket: np.asarray(
                     infer_padded(e, zeros, b).prediction))
+        for n in train_batches:
+            if self._train_engine is None:
+                raise RuntimeError("train_batches warmup needs online "
+                                   "learning (train_backend=)")
+            lits = np.zeros((n, self.cfg.n_literals), np.int8)
+            labels = np.zeros((n,), np.int32)
+            key = jax.random.key(0)
+            await loop.run_in_executor(
+                self._pool,
+                lambda l=lits, y=labels: jax.block_until_ready(
+                    self._train_engine.step(self._current[1], key, l, y).ta))
 
     # -- request path -------------------------------------------------
 
@@ -228,6 +318,14 @@ class TMServer:
         """
         if self._closed:
             raise RuntimeError("TMServer is stopped")
+        lits = self._check_literals(literals)
+        future = asyncio.get_running_loop().create_future()
+        version, state = self._current
+        await self._queue.put(_Request(lits, future, client, version, state))
+        return await future
+
+    def _check_literals(self, literals) -> np.ndarray:
+        """Validate/promote request literals to ``(n, 2F)`` int8."""
         lits = np.asarray(literals, dtype=np.int8)
         if lits.ndim == 1:
             lits = lits[None, :]
@@ -235,8 +333,33 @@ class TMServer:
             raise ValueError(
                 f"expected (n, {self.cfg.n_literals}) literals, "
                 f"got {np.shape(literals)}")
+        return lits
+
+    async def submit_labeled(self, literals, labels) -> int:
+        """One labeled feedback batch: ``(n, 2F)`` literals + ``(n,)``
+        labels → the state version that includes this update.
+
+        Requires online-learning mode (``train_backend=`` at
+        construction).  Updates share the request queue, so they apply in
+        FIFO order with predicts and feel the same backpressure; the
+        returned future resolves once the new state version is live.
+        Predicts already queued keep the version they arrived under.
+        """
+        if self._closed:
+            raise RuntimeError("TMServer is stopped")
+        if self._train_engine is None:
+            raise RuntimeError(
+                "online learning is off: construct TMServer with "
+                "train_backend=<TrainEngine name> to enable submit_labeled")
+        lits = self._check_literals(literals)
+        y = np.asarray(labels, dtype=np.int32).reshape(-1)
+        if y.shape[0] != lits.shape[0]:
+            raise ValueError(f"labels {y.shape} do not match "
+                             f"{lits.shape[0]} literal rows")
+        if y.size and (y.min() < 0 or y.max() >= self.cfg.n_classes):
+            raise ValueError(f"labels out of range [0, {self.cfg.n_classes})")
         future = asyncio.get_running_loop().create_future()
-        await self._queue.put(_Request(lits, future, client))
+        await self._queue.put(_Update(lits, y, future))
         return await future
 
     # -- scheduler ----------------------------------------------------
@@ -253,6 +376,9 @@ class TMServer:
                 if first is _STOP:
                     self._stop_seen = True
                     continue
+            if isinstance(first, _Update):
+                await self._run_update(first)
+                continue
             batch, rows = [first], first.n
             deadline = time.monotonic() + policy.max_wait_us * 1e-6
             while rows < policy.max_batch:
@@ -270,22 +396,59 @@ class TMServer:
                 if nxt is _STOP:
                     self._stop_seen = True
                     break
-                if rows + nxt.n > policy.max_batch:
-                    self._carry = nxt       # opens the next batch
+                if (isinstance(nxt, _Update) or nxt.version != first.version
+                        or rows + nxt.n > policy.max_batch):
+                    # an update, a different state version, or an overflow
+                    # closes this batch; the item opens the next round
+                    self._carry = nxt
                     break
                 batch.append(nxt)
                 rows += nxt.n
             await self._run_batch(batch, rows)
 
+    async def _run_update(self, upd: _Update) -> None:
+        """Apply one labeled batch on the worker thread, then publish the
+        new ``(version, state)`` pair — predicts never see a partial
+        state because the swap is a single tuple assignment of an
+        immutable, fully-computed state."""
+        import jax
+
+        def learn() -> tuple:
+            # advance the key chain only on success: the offline-replay
+            # contract covers *applied* updates, so a failed step must
+            # not consume a key
+            chain, k = jax.random.split(self._train_key)
+            new_state = self._train_engine.step(
+                self._current[1], k, upd.lits, upd.labels)
+            jax.block_until_ready(new_state.ta)
+            return chain, new_state
+
+        try:
+            chain, new_state = await asyncio.get_running_loop() \
+                .run_in_executor(self._pool, learn)
+        except Exception as exc:
+            if not upd.future.done():
+                upd.future.set_exception(exc)
+            self._n_errors += 1
+            return
+        self._train_key = chain
+        version = self._current[0] + 1
+        self._current = (version, new_state)
+        self._n_updates += 1
+        self._n_update_rows += upd.lits.shape[0]
+        if not upd.future.done():
+            upd.future.set_result(version)
+
     async def _run_batch(self, batch: list[_Request], rows: int) -> None:
         parts = [r.lits for r in batch]
+        state = batch[0].state          # one version per batch, by coalesce
 
         def compute() -> tuple[EngineResult, int]:
             # assemble and pad in numpy, fan out in numpy: only the
             # engine call is traced, so XLA compiles once per (engine,
             # bucket) no matter how request sizes combine
             bucket = bucket_for(rows, self.buckets)
-            engine = self.engine_for(bucket)
+            engine = self.engine_for(bucket, state)
             lits = parts[0] if len(parts) == 1 else np.concatenate(parts)
             res = infer_padded(engine, lits, bucket)
             return EngineResult(
@@ -327,7 +490,9 @@ class TMServer:
 
         ``batch_fill`` is real rows ÷ padded rows — how much of each
         compiled bucket carried actual work.  Percentiles come from a
-        sliding window of per-request latencies (seconds → ms).
+        sliding window of per-request latencies (seconds → ms).  In
+        online-learning mode, ``state_version``/``updates``/
+        ``update_rows`` track the learning stream.
         """
         p50_ms, p99_ms = percentiles_ms(self._latencies)
         return {
@@ -340,5 +505,8 @@ class TMServer:
             "batch_fill": self._n_rows / max(self._n_padded_rows, 1),
             "p50_ms": p50_ms,
             "p99_ms": p99_ms,
+            "state_version": self._current[0],
+            "updates": self._n_updates,
+            "update_rows": self._n_update_rows,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
         }

@@ -1,0 +1,254 @@
+"""Online-learning TMServer: versioned copy-on-write state swaps.
+
+The serving-while-learning contract:
+
+- **opt-in** — ``submit_labeled`` requires ``train_backend=``;
+- **versioned** — each applied update bumps ``state_version`` by exactly
+  one, and the update chain replays bit-exactly offline from
+  ``train_seed`` (split chain, ``step`` per batch, FIFO order);
+- **never torn** — every predict response equals a full oracle ``infer``
+  under exactly one committed state version (its arrival version): the
+  batcher may never mix versions in one batch or expose a half-applied
+  update, no matter how predicts and updates interleave.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tm import TMConfig, TMState, init_tm
+from repro.engine import get_engine, get_train_engine
+from repro.serve import ServePolicy, TMServer
+
+C, M, F = 3, 8, 9
+
+
+def _tm(seed=0):
+    cfg = TMConfig(n_classes=C, n_clauses=M, n_features=F, T=5, s=3.9)
+    return cfg, init_tm(cfg, jax.random.key(seed))
+
+
+def _stream(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    lits = rng.integers(0, 2, (n, cfg.n_literals), dtype=np.int8)
+    labels = rng.integers(0, cfg.n_classes, (n,), dtype=np.int32)
+    return lits, labels
+
+
+def _expected_chain(cfg, state, batches, *, backend, seed):
+    """Replay the server's update chain offline: split-advance the key
+    chain and apply engine.step per labeled batch, in order."""
+    eng = get_train_engine(backend, cfg)
+    chain = jax.random.key(seed)
+    states = [state]
+    for lits, labels in batches:
+        chain, k = jax.random.split(chain)
+        state = eng.step(state, k, jnp.asarray(lits), jnp.asarray(labels))
+        states.append(state)
+    return states
+
+
+def test_submit_labeled_requires_opt_in():
+    cfg, state = _tm()
+    lits, labels = _stream(cfg, 4, 1)
+
+    async def go():
+        async with TMServer(cfg, state,
+                            ServePolicy(max_batch=4,
+                                        backend="oracle")) as srv:
+            with pytest.raises(RuntimeError, match="online learning is off"):
+                await srv.submit_labeled(lits, labels)
+            with pytest.raises(AttributeError):
+                srv.state = state       # state is a read-only property
+
+    asyncio.run(go())
+
+
+def test_submit_labeled_validation():
+    cfg, state = _tm()
+    lits, labels = _stream(cfg, 4, 2)
+
+    async def go():
+        async with TMServer(cfg, state, ServePolicy(max_batch=4),
+                            train_backend="reference") as srv:
+            with pytest.raises(ValueError, match="labels"):
+                await srv.submit_labeled(lits, labels[:2])
+            with pytest.raises(ValueError, match="out of range"):
+                await srv.submit_labeled(lits, labels + 10)
+            with pytest.raises(ValueError, match="expected"):
+                await srv.submit_labeled(lits[:, :4], labels)
+
+    asyncio.run(go())
+
+
+@pytest.mark.parametrize("backend", ["reference", "packed", "fused"])
+def test_update_chain_replays_bit_exactly(backend):
+    """Applied updates advance the version by one each and produce the
+    exact states the offline replay predicts — through any backend."""
+    cfg, state = _tm(seed=3)
+    lits, labels = _stream(cfg, 48, 4)
+    batches = [(lits[i:i + 16], labels[i:i + 16]) for i in (0, 16, 32)]
+    expected = _expected_chain(cfg, state, batches, backend=backend, seed=11)
+
+    async def go():
+        versions, states = [], []
+        async with TMServer(cfg, state, ServePolicy(max_batch=8),
+                            train_backend=backend, train_seed=11) as srv:
+            await srv.warmup(train_batches=(16,))
+            assert srv.state_version == 0       # warmup leaves state alone
+            np.testing.assert_array_equal(np.asarray(srv.state.ta),
+                                          np.asarray(state.ta))
+            for b in batches:
+                versions.append(await srv.submit_labeled(*b))
+                states.append(srv.state)
+            return versions, states, srv.stats()
+
+    versions, states, stats = asyncio.run(go())
+    assert versions == [1, 2, 3]
+    assert stats["state_version"] == 3 and stats["updates"] == 3
+    assert stats["update_rows"] == 48
+    for got, want in zip(states, expected[1:]):
+        np.testing.assert_array_equal(np.asarray(got.ta),
+                                      np.asarray(want.ta))
+
+
+def test_predict_pinned_to_arrival_version():
+    """A predict submitted before an update resolves against the state it
+    arrived under, even when the update is applied first in queue order."""
+    cfg, state = _tm(seed=5)
+    lits, labels = _stream(cfg, 16, 6)
+    expected = _expected_chain(cfg, state, [(lits, labels)],
+                               backend="reference", seed=0)
+
+    async def go():
+        # max_wait_us high: the predict's batch stays open while the
+        # update (queued behind it) is still pending — the version cut
+        # must close the batch rather than serve it under the new state
+        async with TMServer(cfg, state,
+                            ServePolicy(max_batch=64, max_wait_us=50_000,
+                                        backend="oracle"),
+                            train_backend="reference") as srv:
+            await srv.warmup(train_batches=(16,))
+            p_before = asyncio.ensure_future(srv.submit(lits[:4]))
+            v = await srv.submit_labeled(lits, labels)
+            p_after = await srv.submit(lits[:4])
+            return await p_before, p_after, v
+
+    res_before, res_after, version = asyncio.run(go())
+    assert version == 1
+    ref0 = get_engine("oracle", cfg, expected[0]).infer(jnp.asarray(lits[:4]))
+    ref1 = get_engine("oracle", cfg, expected[1]).infer(jnp.asarray(lits[:4]))
+    np.testing.assert_array_equal(np.asarray(res_before.prediction),
+                                  np.asarray(ref0.prediction))
+    np.testing.assert_array_equal(np.asarray(res_before.class_sums),
+                                  np.asarray(ref0.class_sums))
+    np.testing.assert_array_equal(np.asarray(res_after.prediction),
+                                  np.asarray(ref1.prediction))
+    np.testing.assert_array_equal(np.asarray(res_after.class_sums),
+                                  np.asarray(ref1.class_sums))
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_updates=st.integers(min_value=1, max_value=4),
+       n_predicts=st.integers(min_value=2, max_value=12),
+       max_batch=st.sampled_from((2, 4, 16)),
+       max_wait_us=st.sampled_from((0, 2000)),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_interleaved_predicts_never_see_torn_state(n_updates, n_predicts,
+                                                   max_batch, max_wait_us,
+                                                   seed):
+    """Property: under concurrent interleaving of predicts and updates,
+    every response matches a *committed* version's full oracle result —
+    prediction and class sums together — never a mixture."""
+    cfg, state = _tm(seed=7)
+    lits, labels = _stream(cfg, 64, seed)
+    batches = [(lits[8 * i:8 * i + 8], labels[8 * i:8 * i + 8])
+               for i in range(n_updates)]
+    expected = _expected_chain(cfg, state, batches, backend="packed",
+                               seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    queries = [lits[rng.integers(0, 64, rng.integers(1, 4))]
+               for _ in range(n_predicts)]
+
+    async def go():
+        async with TMServer(cfg, state,
+                            ServePolicy(max_batch=max_batch,
+                                        max_wait_us=max_wait_us,
+                                        backend="oracle"),
+                            train_backend="packed", train_seed=seed) as srv:
+            await srv.warmup(train_batches=(8,))
+            tasks = [srv.submit(q) for q in queries] + \
+                    [srv.submit_labeled(*b) for b in batches]
+            return await asyncio.gather(*tasks)
+
+    results = asyncio.run(go())
+    predict_res = results[:n_predicts]
+    versions = results[n_predicts:]
+    assert sorted(versions) == list(range(1, n_updates + 1))
+    for q, res in zip(queries, predict_res):
+        qj = jnp.asarray(q)
+        matched = False
+        for st_v in expected:
+            ref = get_engine("oracle", cfg, st_v).infer(qj)
+            if ((np.asarray(res.prediction) == np.asarray(ref.prediction))
+                    .all() and
+                    (np.asarray(res.class_sums) ==
+                     np.asarray(ref.class_sums)).all()):
+                matched = True
+                break
+        assert matched, "response matches no committed state version"
+
+
+def test_failing_update_fails_only_itself():
+    """An update error (engine raises) must not kill the scheduler,
+    corrupt the served state/version, or consume a key from the replay
+    chain — the chain covers *applied* updates only."""
+    cfg, state = _tm(seed=9)
+    lits, labels = _stream(cfg, 8, 10)
+    inner = get_train_engine("reference", cfg)
+
+    class FlakyOnce:
+        name = "flaky"
+
+        def __init__(self):
+            self.cfg = cfg
+            self.calls = 0
+
+        def step(self, state, key, x, y):
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("boom")
+            return inner.step(state, key, x, y)
+
+    async def go():
+        srv = TMServer(cfg, state, ServePolicy(max_batch=8,
+                                               backend="oracle"),
+                       train_backend="reference", train_seed=42)
+        srv._train_engine = FlakyOnce()     # inject: fails once, then works
+        async with srv:
+            with pytest.raises(RuntimeError, match="boom"):
+                await srv.submit_labeled(lits, labels)
+            res = await srv.submit(lits[:3])
+            mid = srv.stats()
+            v = await srv.submit_labeled(lits, labels)
+            after = srv.state
+        return res, mid, v, after
+
+    res, mid, v, after = asyncio.run(go())
+    assert mid["state_version"] == 0 and mid["updates"] == 0
+    assert mid["errors"] == 1
+    ref = get_engine("oracle", cfg, state).infer(jnp.asarray(lits[:3]))
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    # the retry succeeded as v1 and used the chain's *first* key — the
+    # failed attempt consumed nothing
+    assert v == 1
+    expected = _expected_chain(cfg, state, [(lits, labels)],
+                               backend="reference", seed=42)
+    np.testing.assert_array_equal(np.asarray(after.ta),
+                                  np.asarray(expected[1].ta))
