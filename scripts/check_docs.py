@@ -1,9 +1,10 @@
 #!/usr/bin/env python
-"""Docstring gate: every public symbol in engine/ and serve/ documented.
+"""Docstring gate: every public symbol in the serving stack documented.
 
-Walks ``src/repro/engine`` and ``src/repro/serve`` with ``ast`` (no
-imports, so it runs before dependencies install) and fails CI when any of
-these lacks a docstring:
+Walks ``src/repro/engine``, ``src/repro/serve``, ``src/repro/checkpoint``
+and the serving launcher ``src/repro/launch/tm_serve.py`` with ``ast``
+(no imports, so it runs before dependencies install) and fails CI when
+any of these lacks a docstring:
 
 - a module,
 - a public (non-underscore) module-level function or class,
@@ -25,7 +26,8 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
-PACKAGES = ("src/repro/engine", "src/repro/serve")
+PACKAGES = ("src/repro/engine", "src/repro/serve", "src/repro/checkpoint",
+            "src/repro/launch/tm_serve.py")
 
 
 def iter_public_defs(tree: ast.Module):
@@ -73,9 +75,13 @@ def main() -> None:
     violations, checked = [], []
     for pkg in args.paths or PACKAGES:
         root = REPO / pkg
-        if not root.is_dir():
-            sys.exit(f"no such package directory: {root}")
-        for path in sorted(root.rglob("*.py")):
+        if root.is_file():
+            paths = [root]
+        elif root.is_dir():
+            paths = sorted(root.rglob("*.py"))
+        else:
+            sys.exit(f"no such package directory or file: {root}")
+        for path in paths:
             v, c = check_file(path)
             violations += v
             checked += c

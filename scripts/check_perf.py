@@ -14,9 +14,10 @@ Handles three row kinds in any of the given files:
   (backend, C, M, B), metric ``infer_us`` (lower is better), baseline
   ``benchmarks/baseline_engine.json``.
 - serve rows (``benchmarks/serve_bench.py``, ``kind`` of ``serve`` /
-  ``serve_baseline``): keyed by (kind, mode, backend, max_batch, rate),
-  metric ``p99_ms`` (lower is better), baseline
-  ``benchmarks/baseline_serve.json``.
+  ``serve_baseline`` / ``serve_learn`` / ``serve_learn_ckpt`` — the
+  last pair is the state-lifecycle checkpoint-overhead measurement):
+  keyed by (kind, mode, backend, max_batch, rate), metric ``p99_ms``
+  (lower is better), baseline ``benchmarks/baseline_serve.json``.
 - train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
   keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
   better), baseline ``benchmarks/baseline_train.json``.
@@ -47,7 +48,8 @@ DEFAULT_TRAIN_BASELINE = REPO / "benchmarks" / "baseline_train.json"
 def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
     """→ (row key, metric field, baseline group) for one JSONL cell."""
     kind = cell.get("kind", "engine")
-    if kind in ("serve", "serve_baseline"):
+    if kind in ("serve", "serve_baseline", "serve_learn",
+                "serve_learn_ckpt"):
         key = (kind, cell.get("mode"), cell["backend"],
                cell.get("max_batch", 0), cell.get("rate", 0.0))
         return key, "p99_ms", "serve"

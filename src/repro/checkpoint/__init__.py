@@ -14,7 +14,15 @@ Design for 1000+ nodes (DESIGN.md §6):
   re-device_put with the *current* mesh's shardings, so restarts may change
   topology (elastic re-mesh after a pod loss);
 - async: ``save_async`` runs the serialization off the critical path;
-- retention: ``gc_keep`` prunes old steps, always keeping the newest valid.
+- retention: ``gc_keep`` prunes old steps, always keeping the newest valid
+  — and never a step another thread is currently writing (an in-flight
+  registry pins steps between ``save_async`` launch and the ``.complete``
+  rename, so retention can race saves freely);
+- lifecycle adapters: :func:`tm_lifecycle_tree` shapes a TM server
+  snapshot — TA state plus the optional update-key-chain cursor — and
+  :func:`restore_tm_lifecycle` rebuilds it without the caller having to
+  know whether a cursor was saved (``extra`` carries the metadata; see
+  docs/operations.md for the operator view of all of this).
 """
 
 from __future__ import annotations
@@ -27,13 +35,58 @@ import jax
 import msgpack
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "gc_keep"]
+__all__ = ["save", "save_async", "restore", "latest_step", "valid_steps",
+           "gc_keep", "read_manifest_extra", "tm_lifecycle_tree",
+           "restore_tm_lifecycle"]
 
 _MAX_SHARD_BYTES = 1 << 30
+
+# steps currently being written, per directory: (abspath, step) → count.
+# save/save_async register here so gc_keep never prunes a step whose
+# ``.complete`` marker hasn't landed yet — without this, retention racing
+# an in-flight re-save of an old step number (rollback → re-checkpoint)
+# can rmtree the freshly renamed directory out from under the writer.
+_inflight_lock = threading.Lock()
+_inflight: dict[tuple[str, int], int] = {}
+
+
+def _inflight_key(directory: str, step: int) -> tuple[str, int]:
+    return os.path.abspath(directory), step
+
+
+def _inflight_add(directory: str, step: int) -> None:
+    key = _inflight_key(directory, step)
+    with _inflight_lock:
+        _inflight[key] = _inflight.get(key, 0) + 1
+
+
+def _inflight_remove(directory: str, step: int) -> None:
+    key = _inflight_key(directory, step)
+    with _inflight_lock:
+        n = _inflight.get(key, 0) - 1
+        if n <= 0:
+            _inflight.pop(key, None)
+        else:
+            _inflight[key] = n
+
+
+def _inflight_steps(directory: str) -> set[int]:
+    prefix = os.path.abspath(directory)
+    with _inflight_lock:
+        return {step for (d, step) in _inflight if d == prefix}
 
 
 def save(directory: str, step: int, tree, *, extra: dict | None = None):
     """Blocking save. ``tree`` may contain jax or numpy arrays."""
+    _inflight_add(directory, step)
+    try:
+        _save_unguarded(directory, step, tree, extra=extra)
+    finally:
+        _inflight_remove(directory, step)
+
+
+def _save_unguarded(directory: str, step: int, tree, *,
+                    extra: dict | None = None):
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f".tmp_step_{step}")
     final = os.path.join(directory, f"step_{step}")
@@ -79,23 +132,42 @@ def save(directory: str, step: int, tree, *, extra: dict | None = None):
 def save_async(directory: str, step: int, tree, *, extra: dict | None = None
                ) -> threading.Thread:
     """Fire-and-forget save off the critical path (device_get happens
-    up-front; caller should not mutate ``tree`` buffers)."""
+    up-front; caller should not mutate ``tree`` buffers).
+
+    The step is registered in-flight *before* the writer thread starts,
+    so a ``gc_keep`` issued immediately after this returns can never
+    prune it (see :func:`gc_keep`)."""
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(target=save, args=(directory, step, host_tree),
-                         kwargs={"extra": extra}, daemon=True)
+    _inflight_add(directory, step)
+
+    def write():
+        try:
+            _save_unguarded(directory, step, host_tree, extra=extra)
+        finally:
+            _inflight_remove(directory, step)
+
+    t = threading.Thread(target=write, daemon=True,
+                         name=f"ckpt-save-{step}")
     t.start()
     return t
 
 
 def latest_step(directory: str) -> int | None:
+    """Newest step number with a valid (``.complete``) checkpoint, or
+    ``None`` when the directory holds none."""
+    steps = valid_steps(directory)
+    return steps[-1] if steps else None
+
+
+def valid_steps(directory: str) -> list[int]:
+    """Ascending step numbers of every valid (``.complete``) checkpoint —
+    the restore/rollback candidates an operator can pick from."""
     if not os.path.isdir(directory):
-        return None
-    steps = []
-    for name in os.listdir(directory):
-        if name.startswith("step_") and \
-                os.path.exists(os.path.join(directory, name, ".complete")):
-            steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        int(name.split("_")[1]) for name in os.listdir(directory)
+        if name.startswith("step_")
+        and os.path.exists(os.path.join(directory, name, ".complete")))
 
 
 def restore(directory: str, step: int, like, *, shardings=None):
@@ -130,12 +202,76 @@ def restore(directory: str, step: int, like, *, shardings=None):
 
 
 def gc_keep(directory: str, keep: int = 3):
-    """Prune old checkpoints, keeping the newest ``keep`` valid steps."""
+    """Prune old checkpoints, keeping the newest ``keep`` valid steps.
+
+    Safe to interleave with ``save``/``save_async``: a step registered
+    in-flight is never pruned, even when a stale *completed* directory of
+    the same number exists (the re-save case after a rollback) — pruning
+    that directory would race the writer's final rename and could delete
+    a checkpoint whose ``.complete`` marker just landed.  Such steps are
+    retained this round and become ordinary prune candidates once their
+    writer finishes (``tests/test_checkpoint.py`` interleaves them).
+    """
     if not os.path.isdir(directory):
         return
-    steps = sorted(
-        int(n.split("_")[1]) for n in os.listdir(directory)
-        if n.startswith("step_")
-        and os.path.exists(os.path.join(directory, n, ".complete")))
-    for s in steps[:-keep]:
+    pinned = _inflight_steps(directory)
+    steps = valid_steps(directory)
+    for s in steps[:-keep] if keep > 0 else steps:
+        if s in pinned:
+            continue
         shutil.rmtree(os.path.join(directory, f"step_{s}"))
+
+
+# -- TM server lifecycle adapters -------------------------------------
+#
+# The serving path snapshots more than the model: (version, TA state,
+# update-key-chain cursor, training metadata).  These helpers keep the
+# tree shape and the manifest ``extra`` schema in one place so
+# TMServer.checkpoint / TMServer.restore and offline tooling agree.
+
+
+def read_manifest_extra(directory: str, step: int) -> dict:
+    """The ``extra`` metadata dict of one saved step — cheap to read (no
+    shard load), which is how operators and ``restore_tm_lifecycle``
+    inspect a checkpoint before committing to a full restore."""
+    path = os.path.join(directory, f"step_{step}", "manifest.msgpack")
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read()).get("extra", {})
+
+
+def tm_lifecycle_tree(ta, cursor=None) -> dict:
+    """The save tree for one TM server lifecycle snapshot.
+
+    ``ta``: the ``(C, M, 2F)`` TA state array.  ``cursor``: the
+    update-key-chain cursor as raw ``uint32`` key data (see
+    ``repro.engine.train.export_key_cursor``), or ``None`` for an
+    inference-only snapshot.  The manifest's ``extra`` must record
+    ``has_cursor`` so :func:`restore_tm_lifecycle` can rebuild the same
+    structure without guessing.
+    """
+    tree = {"ta": ta}
+    if cursor is not None:
+        tree["cursor"] = cursor
+    return tree
+
+
+def restore_tm_lifecycle(directory: str, step: int | None = None
+                         ) -> tuple[int, dict, dict]:
+    """Load one lifecycle snapshot → ``(step, tree, extra)``.
+
+    ``step=None`` picks the newest valid step.  ``tree`` matches
+    :func:`tm_lifecycle_tree` (``cursor`` present iff the snapshot
+    recorded one); ``extra`` is the manifest metadata (version, cfg
+    fields, train backend + opts, key impl — see
+    ``TMServer.checkpoint``).  Raises ``FileNotFoundError`` when the
+    directory holds no valid checkpoint.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no valid checkpoint (step_*/.complete) under {directory}")
+    extra = read_manifest_extra(directory, step)
+    like = tm_lifecycle_tree(0, 0 if extra.get("has_cursor") else None)
+    tree, extra = restore(directory, step, like)
+    return step, tree, extra

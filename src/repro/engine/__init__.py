@@ -14,8 +14,9 @@ from . import backends  # noqa: F401  (registers the built-in backends)
 from .sharding import ShardedEngine
 from .train import (DEFAULT_TRAIN_BACKEND, TrainEngine,
                     available_train_backends, clear_train_engine_cache,
-                    get_train_engine, register_train_backend,
-                    train_engine_cache_info)
+                    export_key_cursor, get_train_engine, import_key_cursor,
+                    register_train_backend, train_engine_cache_info,
+                    train_engine_opts)
 
 __all__ = ["DEFAULT_BACKEND", "DEFAULT_TRAIN_BACKEND", "EngineResult",
            "VoteEngine", "TrainEngine", "ShardedEngine",
@@ -24,6 +25,7 @@ __all__ = ["DEFAULT_BACKEND", "DEFAULT_TRAIN_BACKEND", "EngineResult",
            "engine_cache_info", "train_engine_cache_info",
            "get_engine", "get_train_engine", "infer_padded", "pad_batch",
            "register_backend", "register_train_backend",
+           "export_key_cursor", "import_key_cursor", "train_engine_opts",
            "engine_from_model_config"]
 
 

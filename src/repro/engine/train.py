@@ -68,7 +68,8 @@ from .base import KeyedEngineCache, Registry, _cache_key
 __all__ = ["TrainEngine", "register_train_backend", "get_train_engine",
            "available_train_backends", "clear_train_engine_cache",
            "train_engine_cache_info", "DEFAULT_TRAIN_BACKEND",
-           "ReferenceTrainEngine", "PackedTrainEngine", "FusedTrainEngine"]
+           "ReferenceTrainEngine", "PackedTrainEngine", "FusedTrainEngine",
+           "export_key_cursor", "import_key_cursor", "train_engine_opts"]
 
 DEFAULT_TRAIN_BACKEND = "reference"
 TRAIN_ENGINE_CACHE_SIZE = 8
@@ -140,6 +141,38 @@ def get_train_engine(name: str, cfg: TMConfig, *, cache: bool = True,
     if key is not None:
         _TRAIN_CACHE.insert(key, (), engine)
     return engine
+
+
+def export_key_cursor(key: jax.Array) -> tuple:
+    """Serialize an update-key-chain cursor → ``(data, impl)``.
+
+    ``data`` is the raw ``uint32`` key data (an ordinary array leaf a
+    checkpoint can shard); ``impl`` is the PRNG implementation name
+    (``"threefry2x32"``/``"rbg"``) that :func:`import_key_cursor` needs
+    to rebuild a typed key.  Round-tripping through these is bit-exact,
+    so a restored server resumes the *same* deterministic chain — update
+    ``i+1`` after a restore draws the key the uninterrupted run would
+    have drawn.
+    """
+    import numpy as np
+    return (np.asarray(jax.random.key_data(key)),
+            str(jax.random.key_impl(key)))
+
+
+def import_key_cursor(data, impl: str) -> jax.Array:
+    """Rebuild a typed PRNG key from :func:`export_key_cursor` output."""
+    return jax.random.wrap_key_data(jnp.asarray(data, dtype=jnp.uint32),
+                                    impl=impl)
+
+
+def train_engine_opts(engine: TrainEngine) -> dict:
+    """The constructor opts a built engine was resolved with — the
+    autotune picks a checkpoint must persist so a restore on a different
+    host rebuilds the *same* engine rather than re-consulting a possibly
+    different autotune cache.  Backends expose this via
+    ``lifecycle_opts``; engines without it snapshot nothing."""
+    fn = getattr(engine, "lifecycle_opts", None)
+    return dict(fn()) if fn is not None else {}
 
 
 def _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask):
@@ -218,6 +251,11 @@ class ReferenceTrainEngine:
         return train_step(self.cfg, state, key, x_literals, y,
                           boost_tpf=self.boost_tpf)
 
+    def lifecycle_opts(self) -> dict:
+        """Constructor opts to persist in a checkpoint (see
+        :func:`train_engine_opts`)."""
+        return {"boost_tpf": self.boost_tpf}
+
 
 @register_train_backend("packed")
 class PackedTrainEngine:
@@ -245,6 +283,11 @@ class PackedTrainEngine:
         return _packed_step(self.cfg, state, key, x_literals, y,
                             self._pos_mask, self._neg_mask,
                             boost_tpf=self.boost_tpf)
+
+    def lifecycle_opts(self) -> dict:
+        """Constructor opts to persist in a checkpoint (see
+        :func:`train_engine_opts`)."""
+        return {"boost_tpf": self.boost_tpf}
 
 
 @register_train_backend("fused")
@@ -283,3 +326,9 @@ class FusedTrainEngine:
                            block_b=self._blocks[0],
                            block_m=self._blocks[1],
                            interpret=not on_tpu())
+
+    def lifecycle_opts(self) -> dict:
+        """Constructor opts to persist in a checkpoint — including the
+        resolved autotune tile picks (see :func:`train_engine_opts`)."""
+        return {"boost_tpf": self.boost_tpf,
+                "block_b": self._blocks[0], "block_m": self._blocks[1]}

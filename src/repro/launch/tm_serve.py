@@ -22,6 +22,23 @@ Backpressure is visible live: at arrival rates beyond engine throughput,
 "teacher" TM, so the served machine genuinely adapts) interleaved with
 the predict traffic, and the stats line shows the state version climbing
 while predict latency stays bounded.
+
+State lifecycle (docs/operations.md is the operator runbook):
+
+    PYTHONPATH=src python -m repro.launch.tm_serve --train-backend packed \
+        --checkpoint-dir /tmp/tm-ckpt --checkpoint-every 50 \
+        --probe-every 20                 # snapshot + drift-monitor
+    # kill it mid-run, then resume from the newest valid snapshot:
+    PYTHONPATH=src python -m repro.launch.tm_serve --train-backend packed \
+        --checkpoint-dir /tmp/tm-ckpt --restore
+
+``--checkpoint-every N`` snapshots ``(version, state, key-chain cursor,
+train backend + autotune picks)`` every N applied updates off the worker
+thread (``--checkpoint-keep`` newest retained); ``--restore`` resumes
+the deterministic update chain bit-exactly from the newest valid step.
+``--probe-every N`` scores a held-out teacher-labeled probe stream every
+N updates; the live line then shows ``acc=``/``drift=`` next to the
+version, which is the launcher view of drift monitoring.
 """
 
 from __future__ import annotations
@@ -56,6 +73,13 @@ async def _stats_printer(server, every: float) -> None:
         prev = s["requests"]
         learn = (f"  ver={s['state_version']}" if s["updates"] or
                  s["state_version"] else "")
+        probe = s["probe"]
+        if probe is not None and probe["accuracy"] is not None:
+            learn += (f"  acc={probe['accuracy']:.3f}"
+                      f"  drift={probe['drift']:+.3f}")
+        ckpt = s["checkpoint"]
+        if ckpt is not None and ckpt["last_step"] is not None:
+            learn += f"  ckpt@{ckpt['last_step']}"
         print(f"[t+{time.monotonic() - t0:5.1f}s] {rps:8.0f} req/s  "
               f"qdepth={s['qdepth']:4d}  "
               f"fill={s['batch_fill']:.2f}  "
@@ -105,6 +129,7 @@ async def _run(args) -> None:
     pool = rng.integers(0, 2, (4096, cfg.n_literals), dtype=np.int8)
 
     labels = None
+    probe = None
     if args.train_backend:
         # labels from a fixed random "teacher" machine: the served TM has
         # something consistent to adapt toward while it serves
@@ -114,10 +139,31 @@ async def _run(args) -> None:
                               density=args.density, seed=args.seed + 2)
         labels = np.asarray(get_engine("oracle", cfg, teacher)
                             .infer(jnp.asarray(pool)).prediction)
+        if args.probe_every:
+            # held-out probe stream: fresh rows the label feeder never
+            # submits, teacher-labeled — accuracy against it is the
+            # launcher's drift monitor
+            probe_lits = np.random.default_rng(args.seed + 4).integers(
+                0, 2, (args.probe_size, cfg.n_literals), dtype=np.int8)
+            probe_y = np.asarray(get_engine("oracle", cfg, teacher)
+                                 .infer(jnp.asarray(probe_lits)).prediction)
+            probe = (probe_lits, probe_y)
 
-    async with TMServer(cfg, state, policy,
-                        train_backend=args.train_backend or None,
-                        train_seed=args.seed) as server:
+    server = TMServer(cfg, state, policy,
+                      train_backend=args.train_backend or None,
+                      train_seed=args.seed,
+                      checkpoint_dir=args.checkpoint_dir,
+                      checkpoint_every_updates=args.checkpoint_every,
+                      checkpoint_keep=args.checkpoint_keep,
+                      history_size=args.history_size,
+                      probe=probe, probe_every_updates=args.probe_every)
+    if args.restore:
+        if not args.checkpoint_dir:
+            raise SystemExit("--restore needs --checkpoint-dir")
+        version = server.restore()
+        print(f"restored from {args.checkpoint_dir} at state version "
+              f"{version} (resuming the deterministic update chain)")
+    async with server:
         print(f"TM C={cfg.n_classes} M={cfg.n_clauses} F={cfg.n_features} "
               f"density={args.density}  buckets={server.buckets}")
         print(f"routing: {server.stats()['routing']}")
@@ -158,9 +204,22 @@ async def _run(args) -> None:
               f"({served / wall:,.0f} req/s)  "
               f"batches={s['batches']}  fill={s['batch_fill']:.2f}  "
               f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms{learn}")
+        if s["checkpoint"] is not None:
+            c = s["checkpoint"]
+            print(f"checkpoints: dir={c['dir']}  last_step={c['last_step']}"
+                  f"  restored_from={c['restored_from']}  "
+                  f"history={s['history']['versions']}")
+        if s["probe"] is not None and s["probe"]["accuracy"] is not None:
+            p = s["probe"]
+            print(f"drift probe: acc={p['accuracy']:.3f}  "
+                  f"best={p['best']:.3f}  drift={p['drift']:+.3f}  "
+                  f"({p['evals']} evals, last at v{p['at_version']})")
 
 
 def main() -> None:
+    """CLI entry point: parse flags, stand up the server, drive traffic
+    (see the module docstring for the flag reference and the lifecycle
+    workflows; docs/operations.md for the operator runbook)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--clauses", type=int, default=100)
@@ -179,6 +238,27 @@ def main() -> None:
                     help="labeled feedback batches per second")
     ap.add_argument("--label-batch", type=int, default=32,
                     help="rows per labeled feedback batch")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist lifecycle snapshots here (see "
+                         "docs/operations.md)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="async snapshot every N applied updates "
+                         "(0 = only on graceful stop; needs "
+                         "--checkpoint-dir)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="newest valid snapshots retained on disk")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the newest valid snapshot in "
+                         "--checkpoint-dir before serving")
+    ap.add_argument("--history-size", type=int, default=8,
+                    help="bounded in-memory ring of recent (version, "
+                         "state) rollback targets")
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="score the held-out probe stream every N "
+                         "applied updates (0 = off; needs "
+                         "--train-backend)")
+    ap.add_argument("--probe-size", type=int, default=256,
+                    help="rows in the held-out drift probe stream")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="open-loop Poisson arrival rate (req/s)")
     ap.add_argument("--clients", type=int, default=0,

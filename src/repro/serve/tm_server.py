@@ -34,6 +34,23 @@ throughput here comes from decoupling arrival from evaluation:
   results stay bit-exact against the state version they arrived under
   even while training runs concurrently.
 
+- state lifecycle (``checkpoint_dir=``) — the learning state no longer
+  dies with the process.  :meth:`checkpoint` snapshots ``(version,
+  TMState, update-key-chain cursor, train backend + autotune picks)``
+  through :mod:`repro.checkpoint` (atomic, sharded, ``.complete``-marked);
+  ``checkpoint_every_updates=`` takes them periodically off the worker
+  thread via ``save_async`` with ``gc_keep`` retention, and
+  :meth:`restore` resumes a killed server bit-exactly — the restored key
+  chain draws the same keys the uninterrupted run would have, so the
+  replay contract survives the restart.  A bounded ring of recent
+  ``(version, state)`` pairs (``history_size=``) keeps rollback targets
+  and recent versions alive with bounded memory, and :meth:`rollback`
+  re-publishes a historical or checkpointed state.  Drift monitoring
+  (``probe=``, ``probe_every_updates=``) scores a held-out probe stream
+  on the worker thread as the state advances and surfaces rolling
+  accuracy/regression deltas in :meth:`stats`.  Operator procedures:
+  docs/operations.md.
+
 >>> async with TMServer(cfg, state, ServePolicy(max_batch=64),
 ...                     train_backend="packed") as srv:
 ...     result = await srv.submit(literals)       # (n, 2F) or (2F,)
@@ -183,17 +200,37 @@ class TMServer:
     uses ``split(chain)[1]`` with ``chain = split(chain)[0]`` advanced
     each update, so a replay with the same seed and update order is
     bit-identical.
+
+    Lifecycle knobs: ``checkpoint_dir`` names where :meth:`checkpoint` /
+    :meth:`restore` persist snapshots; ``checkpoint_every_updates > 0``
+    auto-snapshots asynchronously every that many applied updates
+    (``checkpoint_keep`` newest retained on disk).  ``history_size``
+    bounds the in-memory ring of recent ``(version, state)`` pairs that
+    :meth:`rollback` draws from.  ``probe=(literals, labels)`` with
+    ``probe_every_updates > 0`` scores the held-out probe stream on the
+    worker thread every N applied updates (drift monitoring — see
+    :meth:`stats` and docs/operations.md).
     """
 
     def __init__(self, cfg: TMConfig, state: TMState,
                  policy: ServePolicy | None = None, *,
                  routing: dict[int, str] | None = None,
                  train_backend: str | None = None, train_seed: int = 0,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every_updates: int = 0,
+                 checkpoint_keep: int = 3,
+                 history_size: int = 8,
+                 probe: tuple | None = None,
+                 probe_every_updates: int = 0,
+                 probe_window: int = 256,
                  latency_window: int = 4096):
         self.cfg = cfg
         # (version, state): swapped as one tuple so concurrent readers
-        # (submit on the event loop, stats) always see a matched pair
-        self._current: tuple[int, TMState] = (0, state)
+        # (submit on the event loop, stats) always see a matched pair —
+        # _publish also appends the pair to the bounded history ring
+        self._history: deque[tuple[int, TMState]] = deque(
+            maxlen=max(1, int(history_size)))
+        self._publish(0, state)
         self.policy = policy or ServePolicy()
         self.buckets = self.policy.resolved_buckets()
         # routing reflects the *initial* state's include density; online
@@ -203,11 +240,38 @@ class TMServer:
                           backend=self.policy.backend)
         self._train_engine = None
         self._train_key = None
+        self._train_backend = train_backend
         if train_backend is not None:
             import jax
             from repro.engine import get_train_engine
             self._train_engine = get_train_engine(train_backend, cfg)
             self._train_key = jax.random.key(train_seed)
+        # -- lifecycle: checkpointing, rollback, drift probe ----------
+        self._ckpt_dir = checkpoint_dir
+        self._ckpt_every = int(checkpoint_every_updates)
+        self._ckpt_keep = int(checkpoint_keep)
+        if self._ckpt_every and checkpoint_dir is None:
+            raise ValueError("checkpoint_every_updates needs checkpoint_dir=")
+        self._ckpt_threads: list = []     # live save_async writer threads
+        self._last_ckpt_version: int | None = None
+        self._restored_from: int | None = None
+        self._n_rollbacks = 0
+        self._probe = None
+        if probe is not None:
+            lits, labels = probe
+            lits = self._check_literals(lits)
+            y = np.asarray(labels, dtype=np.int32).reshape(-1)
+            if y.shape[0] != lits.shape[0]:
+                raise ValueError(f"probe labels {y.shape} do not match "
+                                 f"{lits.shape[0]} literal rows")
+            self._probe = (lits, y)
+        self._probe_every = int(probe_every_updates)
+        if self._probe_every and self._probe is None:
+            raise ValueError("probe_every_updates needs probe=(lits, labels)")
+        self._probe_history: deque[tuple[int, float]] = deque(
+            maxlen=probe_window)
+        self._probe_best: float | None = None
+        self._n_probe_evals = 0
         self._queue: asyncio.Queue = asyncio.Queue(
             maxsize=self.policy.queue_depth)
         self._pool = ThreadPoolExecutor(
@@ -226,6 +290,14 @@ class TMServer:
         self._n_updates = 0
         self._n_update_rows = 0
 
+    def _publish(self, version: int, state: TMState) -> None:
+        """Swap in a ``(version, state)`` pair atomically and remember it
+        in the bounded history ring (rollback targets; memory stays
+        bounded because the ring evicts oldest-first while in-flight
+        predicts keep their own pinned references alive)."""
+        self._current = (version, state)
+        self._history.append((version, state))
+
     @property
     def state(self) -> TMState:
         """The currently served ``TMState`` (the newest applied version)."""
@@ -233,8 +305,15 @@ class TMServer:
 
     @property
     def state_version(self) -> int:
-        """How many labeled updates have been applied (0 at start)."""
+        """How many labeled updates have been applied (0 at start; a
+        restore adopts the checkpoint's version, a rollback bumps it)."""
         return self._current[0]
+
+    @property
+    def history_versions(self) -> tuple[int, ...]:
+        """Versions currently retained in the bounded history ring
+        (oldest → newest) — the in-memory :meth:`rollback` targets."""
+        return tuple(v for v, _ in self._history)
 
     # -- lifecycle ----------------------------------------------------
 
@@ -247,7 +326,10 @@ class TMServer:
         return self
 
     async def stop(self) -> None:
-        """Graceful shutdown: drain queued requests, then stop."""
+        """Graceful shutdown: drain queued requests, take a final
+        checkpoint when periodic checkpointing is on and the state has
+        advanced past the last snapshot, then join any in-flight
+        checkpoint writers so no snapshot is torn by process exit."""
         if self._closed:
             return
         self._closed = True
@@ -255,12 +337,147 @@ class TMServer:
         if self._task is not None:
             await self._task
         self._pool.shutdown(wait=True)
+        if (self._ckpt_dir is not None
+                and self._current[0] != self._last_ckpt_version):
+            self.checkpoint()
+        for t in self._ckpt_threads:
+            t.join()
+        self._ckpt_threads.clear()
 
     async def __aenter__(self) -> "TMServer":
         return await self.start()
 
     async def __aexit__(self, *exc) -> None:
         await self.stop()
+
+    # -- state lifecycle: checkpoint / restore / rollback -------------
+
+    def checkpoint(self, directory: str | None = None, *,
+                   block: bool = True) -> int:
+        """Snapshot the full serving lifecycle → the step number written.
+
+        Persists ``(version, TMState, update-key-chain cursor, train
+        backend + resolved autotune opts)`` through
+        :mod:`repro.checkpoint` at ``step == state_version`` — atomic
+        (tmp-dir + rename), valid only once ``.complete`` lands.
+        ``block=False`` hands serialization to a background writer
+        thread (``save_async``; the host copy is taken up-front, so the
+        served state may keep advancing) and applies ``gc_keep``
+        retention, which is what the periodic auto-checkpoint path uses.
+
+        Call from the event-loop thread (or on a stopped server): the
+        snapshot must pair the published ``(version, state)`` with the
+        key-chain cursor, and both are only mutated there.
+        """
+        directory = self._ckpt_dir if directory is None else directory
+        if directory is None:
+            raise ValueError("no checkpoint directory: pass directory= or "
+                             "construct TMServer with checkpoint_dir=")
+        from repro import checkpoint as ckpt
+        from repro.engine.train import export_key_cursor, train_engine_opts
+        version, state = self._current
+        cursor = None
+        extra = {"version": version, "has_cursor": False,
+                 "cfg": dataclasses.asdict(self.cfg),
+                 "train_backend": self._train_backend,
+                 "train_opts": {}, "updates": self._n_updates,
+                 "rollbacks": self._n_rollbacks}
+        if self._train_key is not None:
+            data, impl = export_key_cursor(self._train_key)
+            cursor, extra["has_cursor"], extra["key_impl"] = data, True, impl
+            extra["train_opts"] = train_engine_opts(self._train_engine)
+        tree = ckpt.tm_lifecycle_tree(state.ta, cursor)
+        if block:
+            ckpt.save(directory, version, tree, extra=extra)
+        else:
+            self._ckpt_threads = [t for t in self._ckpt_threads
+                                  if t.is_alive()]
+            self._ckpt_threads.append(
+                ckpt.save_async(directory, version, tree, extra=extra))
+        ckpt.gc_keep(directory, self._ckpt_keep)
+        self._last_ckpt_version = version
+        return version
+
+    def restore(self, directory: str | None = None, *,
+                step: int | None = None) -> int:
+        """Resume from a checkpoint → the restored state version.
+
+        Loads the newest valid step (or ``step=``), verifies the saved
+        ``TMConfig`` matches this server's, and adopts the snapshot's
+        ``(version, state)``, update-key-chain cursor, and train backend
+        with its saved autotune opts — so a killed-and-restarted server
+        replays bit-exactly against the uninterrupted run (the next
+        update draws the key the unbroken chain would have drawn).  The
+        history ring restarts at the restored pair.  Must be called
+        before :meth:`start` (restore swaps state non-atomically with
+        respect to a live scheduler).
+        """
+        if self._task is not None and not self._closed:
+            raise RuntimeError("restore() must run before start()")
+        directory = self._ckpt_dir if directory is None else directory
+        if directory is None:
+            raise ValueError("no checkpoint directory: pass directory= or "
+                             "construct TMServer with checkpoint_dir=")
+        import jax.numpy as jnp
+        from repro import checkpoint as ckpt
+        step, tree, extra = ckpt.restore_tm_lifecycle(directory, step)
+        saved_cfg = extra.get("cfg")
+        if saved_cfg and saved_cfg != dataclasses.asdict(self.cfg):
+            raise ValueError(f"checkpoint step_{step} was written for "
+                             f"cfg {saved_cfg}, not {self.cfg}")
+        version = int(extra.get("version", step))
+        self._history.clear()
+        self._publish(version, TMState(ta=jnp.asarray(tree["ta"])))
+        if extra.get("has_cursor"):
+            from repro.engine import get_train_engine
+            from repro.engine.train import import_key_cursor
+            backend = extra.get("train_backend")
+            if backend:
+                # the checkpoint's backend + autotune picks win — even
+                # when the backend name matches the constructor's, the
+                # saved opts override this host's autotune cache:
+                # restore means resume *that* run, not a local retune
+                self._train_engine = get_train_engine(
+                    backend, self.cfg, **extra.get("train_opts", {}))
+                self._train_backend = backend
+            self._train_key = import_key_cursor(tree["cursor"],
+                                                extra["key_impl"])
+        self._restored_from = step
+        self._last_ckpt_version = version
+        return version
+
+    def rollback(self, version: int) -> int:
+        """Re-publish a historical state → the new (bumped) version.
+
+        Looks the target up in the bounded history ring first, then —
+        when a checkpoint directory is configured — on disk at
+        ``step == version``.  The old state publishes under
+        ``state_version + 1`` so versions stay monotonic (in-flight
+        predicts pinned to other versions are untouched).  Rollback
+        restores *state only*: the update-key chain keeps advancing from
+        its current cursor, and the rollback is recorded in ``stats()``
+        (offline replay of a rolled-back server must replay the rollback
+        at the same position).  Operator action — quiesce the label
+        stream first; an update already executing when the rollback
+        lands publishes its own pre-rollback-derived state on top (see
+        docs/operations.md).
+        """
+        state = next((s for v, s in self._history if v == version), None)
+        if state is None and self._ckpt_dir is not None:
+            import jax.numpy as jnp
+            from repro import checkpoint as ckpt
+            if version in ckpt.valid_steps(self._ckpt_dir):
+                _, tree, _ = ckpt.restore_tm_lifecycle(self._ckpt_dir,
+                                                       version)
+                state = TMState(ta=jnp.asarray(tree["ta"]))
+        if state is None:
+            raise KeyError(
+                f"version {version} is in neither the history ring "
+                f"{list(self.history_versions)} nor the checkpoint dir")
+        new_version = self._current[0] + 1
+        self._publish(new_version, state)
+        self._n_rollbacks += 1
+        return new_version
 
     def engine_for(self, bucket: int, state: TMState | None = None):
         """The (cached) engine serving this bucket.
@@ -282,13 +499,21 @@ class TMServer:
         In online-learning mode, ``train_batches`` also compiles the
         train step for those labeled-batch row counts (the update path
         compiles per batch shape, exactly like predict buckets — feed
-        fixed-size labeled batches to avoid mid-traffic compiles).  The
-        warmup step's result is discarded; the served state is untouched.
+        fixed-size labeled batches to avoid mid-traffic compiles).
+        When a drift probe is configured, its (possibly oversized)
+        bucket compiles here too, so the first probe eval doesn't stall
+        the worker thread on XLA.  The warmup step's result is
+        discarded; the served state is untouched.
         """
         import jax
         loop = asyncio.get_running_loop()
         zeros = np.zeros((1, self.cfg.n_literals), np.int8)
-        for bucket in self.buckets:
+        buckets = list(self.buckets)
+        if self._probe is not None:
+            probe_bucket = bucket_for(self._probe[0].shape[0], self.buckets)
+            if probe_bucket not in buckets:
+                buckets.append(probe_bucket)
+        for bucket in buckets:
             eng = self.engine_for(bucket)
             await loop.run_in_executor(
                 self._pool,
@@ -433,11 +658,39 @@ class TMServer:
             return
         self._train_key = chain
         version = self._current[0] + 1
-        self._current = (version, new_state)
+        self._publish(version, new_state)
         self._n_updates += 1
         self._n_update_rows += upd.lits.shape[0]
         if not upd.future.done():
             upd.future.set_result(version)
+        if (self._ckpt_dir is not None and self._ckpt_every
+                and version % self._ckpt_every == 0):
+            # async snapshot: the host copy is taken here on the loop,
+            # serialization runs on a background writer thread
+            self.checkpoint(block=False)
+        if (self._probe is not None and self._probe_every
+                and self._n_updates % self._probe_every == 0):
+            try:
+                acc = await asyncio.get_running_loop().run_in_executor(
+                    self._pool, self._probe_eval, new_state)
+            except Exception:
+                self._n_errors += 1
+            else:
+                self._probe_history.append((version, acc))
+                self._n_probe_evals += 1
+                if self._probe_best is None or acc > self._probe_best:
+                    self._probe_best = acc
+
+    def _probe_eval(self, state: TMState) -> float:
+        """Score the held-out probe stream under ``state`` (worker
+        thread): accuracy through the same padded-bucket engine path
+        predicts take, so probing stays off the event loop and shares
+        the compiled (engine, bucket) pairs."""
+        lits, labels = self._probe
+        bucket = bucket_for(lits.shape[0], self.buckets)
+        engine = self.engine_for(bucket, state)
+        res = infer_padded(engine, lits, bucket)
+        return float((np.asarray(res.prediction) == labels).mean())
 
     async def _run_batch(self, batch: list[_Request], rows: int) -> None:
         parts = [r.lits for r in batch]
@@ -493,8 +746,40 @@ class TMServer:
         sliding window of per-request latencies (seconds → ms).  In
         online-learning mode, ``state_version``/``updates``/
         ``update_rows`` track the learning stream.
+
+        Lifecycle keys: ``history`` (versions retained in the bounded
+        ring + its capacity), ``rollbacks``, ``checkpoint`` (directory,
+        last step written, pending async writers, restored-from step;
+        ``None`` when checkpointing is off), and ``probe`` (``None``
+        when drift monitoring is off; otherwise latest/best accuracy,
+        ``drift`` = best − latest ≥ 0, ``delta`` = latest − previous,
+        window mean, eval count — how an operator reads regression, see
+        docs/operations.md).
         """
         p50_ms, p99_ms = percentiles_ms(self._latencies)
+        ckpt_stats = None
+        if self._ckpt_dir is not None:
+            ckpt_stats = {
+                "dir": self._ckpt_dir,
+                "last_step": self._last_ckpt_version,
+                "pending": sum(t.is_alive() for t in self._ckpt_threads),
+                "restored_from": self._restored_from,
+            }
+        probe_stats = None
+        if self._probe is not None:
+            probe_stats = {"evals": self._n_probe_evals, "accuracy": None,
+                           "best": self._probe_best, "drift": 0.0,
+                           "delta": 0.0, "window_mean": 0.0,
+                           "at_version": None}
+            if self._probe_history:
+                accs = [a for _, a in self._probe_history]
+                probe_stats.update(
+                    accuracy=accs[-1],
+                    drift=round(self._probe_best - accs[-1], 6),
+                    delta=round(accs[-1] - accs[-2], 6)
+                    if len(accs) > 1 else 0.0,
+                    window_mean=round(float(np.mean(accs)), 6),
+                    at_version=self._probe_history[-1][0])
         return {
             "requests": self._n_requests,
             "rows": self._n_rows,
@@ -508,5 +793,10 @@ class TMServer:
             "state_version": self._current[0],
             "updates": self._n_updates,
             "update_rows": self._n_update_rows,
+            "history": {"versions": list(self.history_versions),
+                        "capacity": self._history.maxlen},
+            "rollbacks": self._n_rollbacks,
+            "checkpoint": ckpt_stats,
+            "probe": probe_stats,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
         }

@@ -1,9 +1,11 @@
-"""Runnable-docs smoke test: the online-learning walkthrough can't rot.
+"""Runnable-docs smoke tests: the serving walkthroughs can't rot.
 
-Imports ``examples/online_learning.py`` and runs a shortened version of
-its serve-while-learning loop, asserting what the walkthrough claims: a
-server in online-learning mode climbs from chance accuracy to a trained
-level on the held-out probes while predicts keep being served.
+Imports ``examples/online_learning.py`` and ``examples/
+checkpoint_serving.py`` and runs shortened versions of their loops,
+asserting what each walkthrough claims: the online-learning server
+climbs from chance accuracy to a trained level while predicts keep
+being served, and a server killed mid-learning and restored from a
+checkpoint continues bit-exactly against the uninterrupted run.
 """
 
 import importlib.util
@@ -31,3 +33,12 @@ def test_online_learning_example_accuracy_climbs():
     # learning happened: from ~chance to the quickstart TM's regime
     assert accs[-1] >= 0.75, trajectory
     assert accs[-1] > accs[0], trajectory
+
+
+def test_checkpoint_serving_example_bit_exact():
+    mod = _load("checkpoint_serving")
+    out = mod.main(n_batches=6, kill_after=3, train_backend="packed",
+                   quiet=True)
+    # the killed-and-restored run matched the uninterrupted one exactly
+    assert out["bit_exact"], out
+    assert out["version"] == 6 and out["n_predictions"] == 6
