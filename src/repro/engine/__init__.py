@@ -11,6 +11,7 @@ from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
                    available_backends, clear_engine_cache, engine_cache_info,
                    get_engine, infer_padded, pad_batch, register_backend)
 from . import backends  # noqa: F401  (registers the built-in backends)
+from . import cascade  # noqa: F401  (registers the early-exit cascade)
 from .sharding import ShardedEngine
 from .train import (DEFAULT_TRAIN_BACKEND, TrainEngine,
                     available_train_backends, clear_train_engine_cache,

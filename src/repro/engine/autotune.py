@@ -52,6 +52,11 @@ SEARCH_SPACE: dict[str, dict[str, tuple[int, ...]]] = {
                    "block_cm": (64, 128, 256)},
     "train:fused": {"block_b": (32, 64, 128),
                     "block_m": (32, 64, 128)},
+    # early-exit cascade: exits need a stage-1 margin ≥ the remainder
+    # size, so fractions below ~0.5 can never pay off — the grid starts
+    # there.  The winner depends on the state's margin distribution, so
+    # the sweep's random-state result is a default, not a guarantee.
+    "cascade": {"stage1_fraction": (0.5, 0.625, 0.75, 0.875)},
 }
 
 _DEFAULT_CACHE = (Path(__file__).resolve().parents[3] / "benchmarks"

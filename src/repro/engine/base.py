@@ -145,7 +145,7 @@ class KeyedEngineCache:
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._data: OrderedDict[tuple, tuple] = OrderedDict()
-        self._stats = {"hits": 0, "misses": 0}
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0}
         self._lock = threading.RLock()
 
     def get(self, key):
@@ -167,7 +167,8 @@ class KeyedEngineCache:
         """
         def _evict(_ref, _key=key):
             with self._lock:
-                self._data.pop(_key, None)
+                if self._data.pop(_key, None) is not None:
+                    self._stats["evictions"] += 1
 
         try:
             refs = tuple(weakref.ref(a, _evict) for a in state)
@@ -178,15 +179,22 @@ class KeyedEngineCache:
             self._data[key] = (refs, engine)
             while len(self._data) > self.maxsize:
                 self._data.popitem(last=False)
+                self._stats["evictions"] += 1
 
     def clear(self) -> None:
-        """Drop every cached engine and reset the hit/miss counters."""
+        """Drop every cached engine and reset all counters.
+
+        A deliberate ``clear`` is not an eviction: the counter tracks
+        entries pushed out by capacity or state death, the cache-health
+        signal surfaced in ``TMServer.stats()``.
+        """
         with self._lock:
             self._data.clear()
-            self._stats["hits"] = self._stats["misses"] = 0
+            for k in self._stats:
+                self._stats[k] = 0
 
     def info(self) -> dict:
-        """``{"size", "maxsize", "hits", "misses"}`` of this cache."""
+        """``{"size", "maxsize", "hits", "misses", "evictions"}``."""
         with self._lock:
             return {"size": len(self._data), "maxsize": self.maxsize,
                     **self._stats}
@@ -229,7 +237,9 @@ def clear_engine_cache() -> None:
 
 
 def engine_cache_info() -> dict:
-    """``{"size", "maxsize", "hits", "misses"}`` of the engine cache."""
+    """``{"size", "maxsize", "hits", "misses", "evictions"}`` of the
+    engine cache (surfaced as the ``engine_cache`` block of
+    ``TMServer.stats()``)."""
     return _ENGINE_CACHE.info()
 
 

@@ -1,0 +1,242 @@
+"""Cascade backend: exact early-exit voting via a stage-1 margin bound.
+
+The paper's time-domain race wins latency because most samples are decided
+by a *wide* vote margin — the winner's chain finishes long before any
+rival's, and the arbiter never waits for the full popcount to settle.
+This backend is the same idea in software, made exact:
+
+- **Stage 1** evaluates a deterministic, evenly-spread subsample ``S`` of
+  ``round(stage1_fraction · M)`` clause indices per class, reusing the
+  ``swar_packed`` word layout (:func:`~repro.engine.backends
+  .swar_clauses_votes` over the subsampled include words).
+- **Exact margin bound.**  Write the full class sum as
+  ``F(c) = P(c) + base(c) + r(c)`` where ``P`` is the stage-1 partial sum,
+  ``base(c)`` is the (build-time constant) contribution of *empty*
+  remainder clauses — an empty clause always fires — and ``r(c)`` is the
+  unknown contribution of the non-empty remainder clauses.  With
+  ``pos_rem(c)``/``neg_rem(c)`` counting those by polarity,
+  ``r(c) ∈ [−neg_rem(c), +pos_rem(c)]`` exactly, so
+  ``F(c) ∈ [lo(c), hi(c)] = [mid(c) − neg_rem(c), mid(c) + pos_rem(c)]``
+  with ``mid = P + base``.  Let ``l = argmax_tournament(mid)``.  A row
+  *exits* iff ``lo(l) ≥ hi(c) + [c < l]`` for every rival ``c ≠ l``: the
+  strict inequality against lower-indexed rivals reproduces the
+  ties→lowest tournament rule, so an exit provably yields the same
+  prediction as the full backend — the test is a bound, not a heuristic.
+- **Stage 2** escalates only the near-tie residue to the configured
+  ``full_backend`` (``swar_packed``/``mxu_fused``/``sparse_csr``/...),
+  compacted on the host and padded to the next power-of-two sub-bucket so
+  the escalation path compiles at most ``log2(B)+1`` shapes per bucket.
+
+``exact_sums=True`` (the default) additionally completes the class sums of
+exited rows with one SWAR pass over the *complement* words, so the
+composite is bit-exact with the full backend in both fields and the
+registry-wide parity/padding property suites hold unchanged.
+``exact_sums=False`` (the serving shed tier) skips that pass and reports
+``mid`` for exited rows — predictions are still provably exact, and total
+clause work drops to ``stage1_fraction + escalation_rate`` of the full
+backend's.  ``aux["escalated"]`` flags which rows took stage 2 either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.popcount import argmax_tournament, pack_bits
+from repro.core.tm import TMConfig, TMState, clause_polarity, include_mask
+
+from .base import EngineResult, infer_padded, register_backend
+from .backends import swar_clauses_votes
+
+__all__ = ["CascadeEngine", "subsample_mask"]
+
+
+def subsample_mask(m: int, fraction: float) -> np.ndarray:
+    """Deterministic evenly-spread boolean mask over ``m`` clause indices.
+
+    Selects exactly ``k = clip(round(fraction·m), 1, m)`` indices by the
+    Bresenham spread ``(i·k) mod m < k`` — every run of ``m/k`` indices
+    contributes one pick, so both polarities and all clause positions are
+    sampled uniformly regardless of ``fraction``.
+    """
+    k = int(np.clip(round(fraction * m), 1, m))
+    return (np.arange(m) * k) % m < k
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (1 for ``n ≤ 1``)."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("c", "m1"))
+def _stage1(inc_words, pos_mask, neg_mask, base, pos_rem, neg_rem,
+            literals, *, c, m1):
+    """Subsample SWAR pass + the exact exit test (see module docstring).
+
+    Returns ``(partial, mid, leader, settled)``: the stage-1 partial sums,
+    the mid estimates ``partial + base``, the mid-tournament leader, and
+    the per-row exit mask.  ``settled[b]`` ⇒ ``leader[b]`` equals the full
+    backend's prediction for row ``b``.
+    """
+    _, partial = swar_clauses_votes(inc_words, pos_mask, neg_mask,
+                                    literals, c=c, m=m1)
+    mid = partial + base[None, :]
+    lo = mid - neg_rem[None, :]
+    hi = mid + pos_rem[None, :]
+    leader = argmax_tournament(mid)
+    lo_l = jnp.take_along_axis(lo, leader[:, None], axis=1)      # (B, 1)
+    cls = jnp.arange(c, dtype=leader.dtype)[None, :]
+    strict = (cls < leader[:, None]).astype(lo.dtype)            # ties→lowest
+    settled = jnp.all((lo_l >= hi + strict) | (cls == leader[:, None]),
+                      axis=1)
+    return partial, mid, leader, settled
+
+
+@functools.partial(jax.jit, static_argnames=("c", "m"))
+def _swar_votes(inc_words, pos_mask, neg_mask, literals, *, c, m):
+    """Votes-only SWAR pass (the ``exact_sums`` completion over R)."""
+    _, votes = swar_clauses_votes(inc_words, pos_mask, neg_mask,
+                                  literals, c=c, m=m)
+    return votes
+
+
+@register_backend("cascade")
+class CascadeEngine:
+    """Two-stage exact cascade: subsample + margin bound, escalate ties.
+
+    Options: ``stage1_fraction`` (clause fraction evaluated in stage 1;
+    exits need a partial margin ≥ the remainder size, so fractions below
+    ~0.5 simply escalate everything — still exact, never faster),
+    ``full_backend`` (stage-2 backend name; any registered backend except
+    ``cascade`` itself), ``exact_sums`` (see module docstring), and any
+    further opts forwarded to the full backend's constructor.
+
+    ``aux`` carries one key, ``escalated`` — a ``(B,)`` bool marking rows
+    that took stage 2.  The full backend's own aux is *not* propagated
+    (it would only exist for escalated rows).  Under a tracer (``jit``,
+    ``shard_map``) host compaction is impossible, so ``infer`` falls back
+    to stage 1 + full backend on all rows with a ``where``-select —
+    bit-identical results, no early-exit saving.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState, *,
+                 stage1_fraction: float = 0.625,
+                 full_backend: str = "swar_packed",
+                 exact_sums: bool = True, **full_opts):
+        if not 0.0 < stage1_fraction <= 1.0:
+            raise ValueError(f"stage1_fraction must be in (0, 1], "
+                             f"got {stage1_fraction}")
+        if full_backend == "cascade":
+            raise ValueError("cascade cannot escalate to itself")
+        self.cfg = cfg
+        self.stage1_fraction = float(stage1_fraction)
+        self.full_backend = full_backend
+        self.exact_sums = bool(exact_sums)
+        c, m = cfg.n_classes, cfg.n_clauses
+        inc = np.asarray(include_mask(cfg, state), np.int8)      # (C, M, L)
+        pol = np.asarray(clause_polarity(m))                     # (M,) ±1
+
+        def packed(mask):
+            # subsampled swar_packed layout: include words + polarity masks
+            sub = inc[:, mask, :].reshape(c * int(mask.sum()), cfg.n_literals)
+            return (pack_bits(jnp.asarray(sub)),
+                    pack_bits(jnp.asarray((pol[mask] > 0).astype(np.int8))),
+                    pack_bits(jnp.asarray((pol[mask] < 0).astype(np.int8))))
+
+        sel = subsample_mask(m, stage1_fraction)
+        rem = ~sel
+        self._m1 = int(sel.sum())
+        self._s1 = packed(sel)
+        # remainder bound terms: empty clauses fire unconditionally, so
+        # their votes are a build-time constant (base); only the non-empty
+        # remainder clauses are uncertain, by polarity.
+        nonempty = inc.sum(-1) > 0                               # (C, M)
+        rem_ne, rem_pol = nonempty[:, rem], pol[rem]
+        self._base = jnp.asarray(
+            ((~rem_ne) * rem_pol[None, :]).sum(-1), jnp.int32)   # (C,)
+        self._pos_rem = jnp.asarray(
+            (rem_ne & (rem_pol > 0)).sum(-1), jnp.int32)
+        self._neg_rem = jnp.asarray(
+            (rem_ne & (rem_pol < 0)).sum(-1), jnp.int32)
+        self._m_rem = int(rem.sum())
+        self._rem = packed(rem) if (self.exact_sums and self._m_rem) else None
+        from .base import get_engine
+        self._full = get_engine(full_backend, cfg, state, **full_opts)
+
+    def infer(self, literals: jax.Array) -> EngineResult:
+        """(B, 2F) {0,1} literals → :class:`EngineResult`.
+
+        Host path: stage 1 on the whole batch, compact the unsettled rows,
+        run the full backend on them padded to a power-of-two sub-bucket,
+        scatter back.  Results are numpy arrays (host-composited).
+        """
+        if isinstance(literals, jax.core.Tracer):
+            return self._infer_traced(literals)
+        c = self.cfg.n_classes
+        partial, mid, leader, settled = _stage1(
+            *self._s1, self._base, self._pos_rem, self._neg_rem,
+            literals, c=c, m1=self._m1)
+        settled_np = np.asarray(settled)
+        esc_idx = np.nonzero(~settled_np)[0]
+        pred = np.asarray(leader).copy()
+        if self.exact_sums:
+            sums = self._complete_sums(literals, partial, settled_np)
+        else:
+            sums = np.asarray(mid).copy()
+        if esc_idx.size:
+            lits = np.asarray(literals)
+            if esc_idx.size < settled_np.size:
+                lits = lits[esc_idx]
+            full = infer_padded(self._full, lits, _next_pow2(esc_idx.size))
+            pred[esc_idx] = np.asarray(full.prediction)
+            sums[esc_idx] = np.asarray(full.class_sums)
+        return EngineResult(pred, sums, {"escalated": ~settled_np})
+
+    def _complete_sums(self, literals, partial, settled_np):
+        """Exact class sums: remainder SWAR pass on the settled rows.
+
+        Escalated rows are left as stage-1 partials here — ``infer``
+        overwrites them with the full backend's sums.
+        """
+        sums = np.asarray(partial).astype(np.int32).copy()
+        if self._rem is None:           # fraction 1.0 or all-empty remainder
+            return sums + np.asarray(self._base)[None, :]
+        set_idx = np.nonzero(settled_np)[0]
+        if set_idx.size == 0:
+            return sums
+        lits = np.asarray(literals)
+        if set_idx.size < settled_np.size:
+            lits = lits[set_idx]
+        bucket = _next_pow2(set_idx.size)
+        if bucket > lits.shape[0]:
+            lits = np.concatenate(
+                [lits, np.zeros((bucket - lits.shape[0],) + lits.shape[1:],
+                                lits.dtype)])
+        rem_votes = np.asarray(_swar_votes(
+            *self._rem, jnp.asarray(lits),
+            c=self.cfg.n_classes, m=self._m_rem))[:set_idx.size]
+        sums[set_idx] += rem_votes
+        return sums
+
+    def _infer_traced(self, literals: jax.Array) -> EngineResult:
+        """Tracer fallback: no host compaction, select via ``where``.
+
+        Runs stage 1 *and* the full backend on every row — bit-identical
+        to the host path (an exited row's leader equals the full
+        prediction by the bound's proof), just without the saving.  This
+        is what makes ``shard_batch=True`` and donated/jitted wrappers
+        work for the cascade.
+        """
+        _, mid, leader, settled = _stage1(
+            *self._s1, self._base, self._pos_rem, self._neg_rem,
+            literals, c=self.cfg.n_classes, m1=self._m1)
+        full = self._full.infer(literals)
+        pred = jnp.where(settled, leader, full.prediction)
+        if self.exact_sums:
+            sums = full.class_sums
+        else:
+            sums = jnp.where(settled[:, None], mid, full.class_sums)
+        return EngineResult(pred, sums, {"escalated": ~settled})

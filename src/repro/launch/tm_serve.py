@@ -17,6 +17,17 @@ Backpressure is visible live: at arrival rates beyond engine throughput,
 ``qdepth`` pins at ``--queue-depth`` and open-loop arrivals block in
 ``submit`` instead of growing an unbounded backlog.
 
+``--shed-backend cascade`` arms the overload tier: batches dispatched
+while the queue holds ≥ ``--shed-qdepth`` waiting items route to the
+exact early-exit cascade (``exact_sums=False`` — predictions bit-exact,
+wide-margin rows skip the remainder pass) instead of the bucket's routed
+backend.  The live line then shows ``shed=`` (batches shed so far) and
+``esc=`` (the cascade's escalation rate), and the final summary reports
+the tier split plus the engine-cache hit/miss/eviction counters:
+
+    PYTHONPATH=src python -m repro.launch.tm_serve --rate 20000 \
+        --shed-backend cascade --shed-qdepth 64
+
 ``--train-backend`` opts into online learning: a label feeder submits
 ``--label-rate`` labeled batches per second (labels from a fixed random
 "teacher" TM, so the served machine genuinely adapts) interleaved with
@@ -80,6 +91,11 @@ async def _stats_printer(server, every: float) -> None:
         ckpt = s["checkpoint"]
         if ckpt is not None and ckpt["last_step"] is not None:
             learn += f"  ckpt@{ckpt['last_step']}"
+        tiers = s["tiers"]
+        if tiers["shed_backend"] is not None or tiers["cascade_rows"]:
+            learn += f"  shed={tiers['shed_batches']}"
+            if tiers["cascade_rows"]:
+                learn += f"  esc={tiers['escalation_rate']:.2f}"
         print(f"[t+{time.monotonic() - t0:5.1f}s] {rps:8.0f} req/s  "
               f"qdepth={s['qdepth']:4d}  "
               f"fill={s['batch_fill']:.2f}  "
@@ -124,7 +140,9 @@ async def _run(args) -> None:
     policy = ServePolicy(max_batch=args.max_batch,
                          max_wait_us=args.max_wait_us,
                          queue_depth=args.queue_depth,
-                         backend=args.backend)
+                         backend=args.backend,
+                         shed_backend=args.shed_backend,
+                         shed_qdepth=args.shed_qdepth)
     rng = np.random.default_rng(args.seed + 1)
     pool = rng.integers(0, 2, (4096, cfg.n_literals), dtype=np.int8)
 
@@ -214,6 +232,17 @@ async def _run(args) -> None:
             print(f"drift probe: acc={p['accuracy']:.3f}  "
                   f"best={p['best']:.3f}  drift={p['drift']:+.3f}  "
                   f"({p['evals']} evals, last at v{p['at_version']})")
+        tiers, cache = s["tiers"], s["engine_cache"]
+        if tiers["shed_backend"] is not None:
+            print(f"shed tier ({tiers['shed_backend']}, qdepth≥"
+                  f"{tiers['shed_qdepth']}): {tiers['shed_batches']} "
+                  f"batches / {tiers['shed_rows']} rows shed; "
+                  f"escalated {tiers['escalated_rows']}/"
+                  f"{tiers['cascade_rows']} rows "
+                  f"(rate {tiers['escalation_rate']:.3f})")
+        print(f"engine cache: {cache['hits']} hits  {cache['misses']} "
+              f"misses  {cache['evictions']} evictions  "
+              f"(size {cache['size']}/{cache['maxsize']})")
 
 
 def main() -> None:
@@ -231,6 +260,13 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-us", type=int, default=2000)
     ap.add_argument("--queue-depth", type=int, default=1024)
+    ap.add_argument("--shed-backend", default=None,
+                    help="overload-tier backend (typically 'cascade'): "
+                         "batches shed here when qdepth crosses "
+                         "--shed-qdepth")
+    ap.add_argument("--shed-qdepth", type=int, default=0,
+                    help="queue depth at dispatch that triggers shedding "
+                         "(0 = shed every batch when --shed-backend set)")
     ap.add_argument("--train-backend", default=None,
                     help="TrainEngine name (reference/packed/fused): serve "
                          "and learn concurrently from a label feeder")

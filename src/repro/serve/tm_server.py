@@ -23,6 +23,16 @@ throughput here comes from decoupling arrival from evaluation:
   loop keeps *accepting* requests while a batch computes.  A failing
   batch (bad routing entry, backend error) sets the exception on its own
   requests' futures only — the scheduler outlives engine errors.
+- overload shedding (opt-in via ``shed_backend=``) — when the queue is
+  at least ``shed_qdepth`` deep at dispatch time, the batch routes to the
+  shed tier's engine instead of the bucket's routed backend.  The
+  intended tier is the exact early-exit ``cascade``
+  (:mod:`repro.engine.cascade`, built with ``exact_sums=False``):
+  predictions stay provably bit-exact while wide-margin rows skip most
+  clause work, so overload degrades *class-sum completeness* — never
+  correctness.  ``shed_qdepth=0`` turns the tier into the permanent
+  route (a pure latency tier).  Tier and escalation counters appear in
+  :meth:`stats` under ``tiers``.
 - online learning (opt-in via ``train_backend=``) — :meth:`submit_labeled`
   enqueues labeled feedback batches into the same FIFO queue.  Updates
   run a :mod:`repro.engine.train` ``TrainEngine`` step on the worker
@@ -69,7 +79,8 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.core.tm import TMConfig, TMState, include_mask
-from repro.engine import EngineResult, get_engine, infer_padded
+from repro.engine import (EngineResult, available_backends,
+                          engine_cache_info, get_engine, infer_padded)
 from repro.engine import autotune
 
 from .loadgen import percentiles_ms
@@ -115,6 +126,14 @@ class ServePolicy:
     ``submit`` awaits (backpressure) instead of growing an unbounded
     backlog.  ``backend``: pin every bucket to one backend; ``None``
     routes per bucket (measured routes, then density heuristic).
+
+    ``shed_backend``: name of the overload tier's backend (``None`` turns
+    shedding off).  A batch dispatched while the queue holds at least
+    ``shed_qdepth`` waiting items routes there instead of the bucket's
+    normal backend; ``shed_qdepth=0`` sheds *every* batch (a pure
+    latency tier).  ``shed_opts`` are forwarded to the tier engine's
+    constructor; a ``cascade`` tier defaults to ``exact_sums=False`` —
+    exact predictions, stage-1 class sums on early-exited rows.
     """
 
     max_batch: int = 64
@@ -122,12 +141,27 @@ class ServePolicy:
     buckets: tuple[int, ...] | None = None
     queue_depth: int = 1024
     backend: str | None = None
+    shed_backend: str | None = None
+    shed_qdepth: int = 0
+    shed_opts: dict | None = None
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """The sorted, deduplicated bucket shapes this policy compiles."""
         if self.buckets is not None:
             return tuple(sorted(set(self.buckets)))
         return default_buckets(self.max_batch)
+
+    def resolved_shed_opts(self) -> dict:
+        """Constructor opts for the shed tier engine.
+
+        ``shed_opts`` wins; a ``cascade`` tier additionally defaults to
+        ``exact_sums=False`` — the overload tier's whole point is to
+        skip the remainder completion pass (predictions stay exact).
+        """
+        opts = dict(self.shed_opts or {})
+        if self.shed_backend == "cascade":
+            opts.setdefault("exact_sums", False)
+        return opts
 
 
 def route_buckets(cfg: TMConfig, state: TMState,
@@ -289,6 +323,18 @@ class TMServer:
         self._n_errors = 0
         self._n_updates = 0
         self._n_update_rows = 0
+        # tier counters: shed decisions are per batch; escalation splits
+        # are per row, reported by any engine whose aux carries an
+        # "escalated" mask (the cascade, shed or routed)
+        self._n_shed_batches = 0
+        self._n_shed_rows = 0
+        self._n_cascade_rows = 0
+        self._n_escalated_rows = 0
+        if (self.policy.shed_backend is not None
+                and self.policy.shed_backend not in available_backends()):
+            raise ValueError(
+                f"unknown shed_backend {self.policy.shed_backend!r}; "
+                f"available: {available_backends()}")
 
     def _publish(self, version: int, state: TMState) -> None:
         """Swap in a ``(version, state)`` pair atomically and remember it
@@ -493,6 +539,19 @@ class TMServer:
         return get_engine(backend, self.cfg,
                           self.state if state is None else state)
 
+    def shed_engine_for(self, bucket: int, state: TMState | None = None):
+        """The (cached) overload-tier engine (``policy.shed_backend``).
+
+        Same keyed-LRU reuse as :meth:`engine_for`; ``bucket`` is unused
+        for engine identity (engines are shape-polymorphic per bucket via
+        jit) but kept for signature symmetry.
+        """
+        if self.policy.shed_backend is None:
+            raise RuntimeError("no shed tier configured (shed_backend=)")
+        return get_engine(self.policy.shed_backend, self.cfg,
+                          self.state if state is None else state,
+                          **self.policy.resolved_shed_opts())
+
     async def warmup(self, *, train_batches: tuple[int, ...] = ()) -> None:
         """Compile every (engine, bucket) pair before taking traffic.
 
@@ -514,11 +573,19 @@ class TMServer:
             if probe_bucket not in buckets:
                 buckets.append(probe_bucket)
         for bucket in buckets:
-            eng = self.engine_for(bucket)
-            await loop.run_in_executor(
-                self._pool,
-                lambda e=eng, b=bucket: np.asarray(
-                    infer_padded(e, zeros, b).prediction))
+            engines = [self.engine_for(bucket)]
+            if self.policy.shed_backend is not None:
+                # the overload tier must be warm *before* overload: a
+                # mid-backlog XLA compile is the worst possible moment.
+                # A cascade tier's escalation sub-buckets still compile
+                # lazily (first near-tie batch), bounded at log2(bucket)
+                # shapes.
+                engines.append(self.shed_engine_for(bucket))
+            for eng in engines:
+                await loop.run_in_executor(
+                    self._pool,
+                    lambda e=eng, b=bucket: np.asarray(
+                        infer_padded(e, zeros, b).prediction))
         for n in train_batches:
             if self._train_engine is None:
                 raise RuntimeError("train_batches warmup needs online "
@@ -629,7 +696,12 @@ class TMServer:
                     break
                 batch.append(nxt)
                 rows += nxt.n
-            await self._run_batch(batch, rows)
+            # shed decision happens at dispatch, against the backlog left
+            # *after* coalescing: a deep residual queue means arrivals are
+            # outpacing compute, exactly when the cheap tier should run
+            shed = (self.policy.shed_backend is not None
+                    and self._queue.qsize() >= self.policy.shed_qdepth)
+            await self._run_batch(batch, rows, shed=shed)
 
     async def _run_update(self, upd: _Update) -> None:
         """Apply one labeled batch on the worker thread, then publish the
@@ -692,7 +764,8 @@ class TMServer:
         res = infer_padded(engine, lits, bucket)
         return float((np.asarray(res.prediction) == labels).mean())
 
-    async def _run_batch(self, batch: list[_Request], rows: int) -> None:
+    async def _run_batch(self, batch: list[_Request], rows: int, *,
+                         shed: bool = False) -> None:
         parts = [r.lits for r in batch]
         state = batch[0].state          # one version per batch, by coalesce
 
@@ -701,7 +774,8 @@ class TMServer:
             # engine call is traced, so XLA compiles once per (engine,
             # bucket) no matter how request sizes combine
             bucket = bucket_for(rows, self.buckets)
-            engine = self.engine_for(bucket, state)
+            engine = (self.shed_engine_for(bucket, state) if shed
+                      else self.engine_for(bucket, state))
             lits = parts[0] if len(parts) == 1 else np.concatenate(parts)
             res = infer_padded(engine, lits, bucket)
             return EngineResult(
@@ -735,6 +809,13 @@ class TMServer:
         self._n_rows += rows
         self._n_batches += 1
         self._n_padded_rows += bucket
+        if shed:
+            self._n_shed_batches += 1
+            self._n_shed_rows += rows
+        esc = res.aux.get("escalated")
+        if esc is not None:             # a cascade served this batch
+            self._n_cascade_rows += int(esc.shape[0])
+            self._n_escalated_rows += int(np.asarray(esc).sum())
 
     # -- observability ------------------------------------------------
 
@@ -746,6 +827,15 @@ class TMServer:
         sliding window of per-request latencies (seconds → ms).  In
         online-learning mode, ``state_version``/``updates``/
         ``update_rows`` track the learning stream.
+
+        ``tiers`` tracks the overload path: the configured shed backend
+        and threshold, how many batches/rows were shed, and — whenever a
+        cascade engine served a batch (shed *or* routed) — the rows it
+        saw, how many escalated to the full backend, and the resulting
+        ``escalation_rate``.  ``engine_cache`` mirrors
+        :func:`repro.engine.engine_cache_info` (hits/misses/evictions):
+        a growing eviction count under steady serving means live state
+        versions are thrashing the engine LRU.
 
         Lifecycle keys: ``history`` (versions retained in the bounded
         ring + its capacity), ``rollbacks``, ``checkpoint`` (directory,
@@ -799,4 +889,16 @@ class TMServer:
             "checkpoint": ckpt_stats,
             "probe": probe_stats,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
+            "tiers": {
+                "shed_backend": self.policy.shed_backend,
+                "shed_qdepth": self.policy.shed_qdepth,
+                "shed_batches": self._n_shed_batches,
+                "shed_rows": self._n_shed_rows,
+                "cascade_rows": self._n_cascade_rows,
+                "escalated_rows": self._n_escalated_rows,
+                "escalation_rate": round(
+                    self._n_escalated_rows / max(self._n_cascade_rows, 1),
+                    6),
+            },
+            "engine_cache": engine_cache_info(),
         }

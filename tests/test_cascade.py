@@ -1,0 +1,339 @@
+"""Property tests for the early-exit cascade VoteEngine.
+
+The cascade's contract: for any (cfg, state, literals) it returns the
+*same predictions* as its full backend — the stage-1 margin bound is
+exact, so early exit never flips a winner, including ties (lowest
+index).  With ``exact_sums=True`` (the registry default) ``class_sums``
+are bit-exact too; with ``exact_sums=False`` the sums of *settled* rows
+are the stage-1 midpoint (prediction-consistent, documented in
+docs/backends.md), while escalated rows still carry full-backend sums.
+
+Covered here: parity across densities (including the 0.0 / 1.0
+degenerate polarity extremes), exact ties from duplicated class blocks,
+margin-1 near-ties, stage-1 fractions from "clips to one clause" to
+1.0, padded buckets via ``infer_padded``, the traced fallback under
+``jax.jit``, the subsample layout, option validation, the engine-cache
+interaction, and the server shed tier end to end.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tm import TMConfig, TMState
+from repro.engine import (EngineResult, available_backends, engine_cache_info,
+                          get_engine, infer_padded)
+from repro.engine.cascade import CascadeEngine, subsample_mask
+from repro.serve import ServePolicy, TMServer
+
+DENSITIES = (0.0, 0.05, 0.3, 1.0)
+SHAPES = [(2, 6, 9), (3, 10, 12), (5, 7, 33), (10, 25, 49)]
+
+
+def _random_tm(c, m, f, *, density=0.15, seed=0, batch=17):
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, 2 * f)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    lits = rng.integers(0, 2, (batch, 2 * f), dtype=np.int8)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32)), jnp.asarray(lits)
+
+
+def _indicator_tm(c=4, m=32, f=16):
+    """The wide-margin machine: class k's +clauses include literal x_k,
+    its −clauses ¬x_k, so a one-hot row of class k scores +m/2 there
+    and −m/2 everywhere the indicator is off — stage 1 settles every
+    row at any fraction ≥ ~0.5."""
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    ta = np.full((c, m, 2 * f), cfg.n_states, np.int32)
+    for k in range(c):
+        ta[k, 0::2, k] = cfg.n_states + 1          # +clauses: x_k
+        ta[k, 1::2, f + k] = cfg.n_states + 1      # −clauses: ¬x_k
+    rows = np.zeros((c, 2 * f), np.int8)
+    rows[np.arange(c), np.arange(c)] = 1
+    rows[:, f:] = 1 - rows[:, :f]
+    return cfg, TMState(ta=jnp.asarray(ta)), jnp.asarray(rows)
+
+
+def _assert_same(res, ref, *, sums=True):
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    if sums:
+        np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                      np.asarray(ref.class_sums))
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("density", DENSITIES)
+@pytest.mark.parametrize("shape", SHAPES,
+                         ids=lambda s: f"C{s[0]}M{s[1]}F{s[2]}")
+def test_parity_across_densities(shape, density):
+    """Bit-exact vs oracle (predictions and sums) at every density,
+    including the all-empty (0.0: every clause fires) and all-included
+    (1.0) polarity extremes."""
+    cfg, st, lits = _random_tm(*shape, density=density, seed=sum(shape))
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = get_engine("cascade", cfg, st).infer(lits)
+    assert isinstance(res, EngineResult)
+    _assert_same(res, ref)
+    assert res.aux["escalated"].shape == (lits.shape[0],)
+
+
+@pytest.mark.parametrize("fraction", (0.01, 0.33, 0.625, 1.0))
+def test_parity_across_fractions(fraction):
+    """Any stage-1 fraction is exact — tiny fractions clip to one
+    clause per class and simply escalate more; 1.0 makes the bound
+    width zero so *every* row settles without escalation."""
+    cfg, st, lits = _random_tm(3, 10, 12, density=0.2, seed=5)
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    eng = get_engine("cascade", cfg, st, stage1_fraction=fraction)
+    res = eng.infer(lits)
+    _assert_same(res, ref)
+    if fraction == 1.0:
+        assert not np.asarray(res.aux["escalated"]).any()
+
+
+def test_exact_ties_duplicated_classes():
+    """Duplicated class blocks ⇒ margin-0 ties everywhere; the strict
+    bound vs lower indices must reproduce ties→lowest exactly."""
+    cfg, st, lits = _random_tm(4, 8, 11, density=0.2, seed=3)
+    ta = np.array(st.ta)
+    ta[2] = ta[1] = ta[0]
+    st = TMState(ta=jnp.asarray(ta))
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = get_engine("cascade", cfg, st, stage1_fraction=0.5).infer(lits)
+    _assert_same(res, ref)
+
+
+def test_margin_one_near_ties():
+    """Two classes one vote apart: class 1 is class 0 plus one extra
+    always-firing positive clause.  The winner flips on a single vote,
+    the tightest case the bound must not get wrong."""
+    cfg = TMConfig(n_classes=2, n_clauses=6, n_features=5)
+    rng = np.random.default_rng(11)
+    ta = np.where(rng.random((2, 6, 10)) < 0.25,
+                  cfg.n_states + 1, cfg.n_states)
+    ta[1] = ta[0]
+    # clause 4 (even ⇒ +1): contradictory includes (x_0 AND ¬x_0) for
+    # class 0 — never fires; empty for class 1 — always fires
+    ta[0, 4, :] = cfg.n_states
+    ta[0, 4, 0] = ta[0, 4, 5] = cfg.n_states + 1
+    ta[1, 4, :] = cfg.n_states
+    st = TMState(ta=jnp.asarray(ta, jnp.int32))
+    # proper [x, ¬x] literal pairs so the contradictory clause truly
+    # never fires (unconstrained random literal columns would let it)
+    x = rng.integers(0, 2, (32, 5), dtype=np.int8)
+    lits = jnp.asarray(np.concatenate([x, 1 - x], axis=1))
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    for fraction in (0.5, 0.75):
+        res = get_engine("cascade", cfg, st,
+                         stage1_fraction=fraction).infer(lits)
+        _assert_same(res, ref)
+        sums = np.asarray(ref.class_sums)
+        assert (np.abs(sums[:, 1] - sums[:, 0]) == 1).all()
+
+
+def test_wide_margin_settles_without_escalation():
+    """The indicator machine settles every one-hot row in stage 1 at
+    the default fraction — the regime the cascade is built for."""
+    cfg, st, rows = _indicator_tm()
+    eng = get_engine("cascade", cfg, st)
+    res = eng.infer(rows)
+    ref = get_engine("oracle", cfg, st).infer(rows)
+    _assert_same(res, ref)
+    assert not np.asarray(res.aux["escalated"]).any()
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.arange(cfg.n_classes))
+
+
+def test_exact_sums_false_predictions_exact():
+    """``exact_sums=False`` (the shed-tier default): predictions stay
+    provably exact on every row; escalated rows carry full-backend
+    sums; settled rows report the stage-1 midpoint, which still ranks
+    the winner first under the tournament tie-break."""
+    cfg, st, lits = _random_tm(5, 7, 33, density=0.1, seed=9, batch=64)
+    ref = get_engine("oracle", cfg, st).infer(lits)
+    res = get_engine("cascade", cfg, st, stage1_fraction=0.5,
+                     exact_sums=False).infer(lits)
+    _assert_same(res, ref, sums=False)
+    esc = np.asarray(res.aux["escalated"])
+    sums = np.asarray(res.class_sums)
+    np.testing.assert_array_equal(sums[esc], np.asarray(ref.class_sums)[esc])
+    # midpoint sums on settled rows still put the exact winner on top
+    # (ties→lowest): re-running the arbiter over them returns prediction
+    pred = np.asarray(res.prediction)
+    best = sums[np.arange(len(pred)), pred]
+    others = np.max(sums, axis=1)
+    assert (best == others).all()
+
+
+# --------------------------------------------------- layout + validation
+
+def test_subsample_mask_properties():
+    for m in (1, 2, 7, 25, 64):
+        for fraction in (0.01, 0.3, 0.625, 1.0):
+            mask = subsample_mask(m, fraction)
+            assert mask.shape == (m,) and mask.dtype == np.bool_
+            k = int(mask.sum())
+            assert 1 <= k <= m
+            assert k == min(m, max(1, int(round(m * fraction))))
+            np.testing.assert_array_equal(mask, subsample_mask(m, fraction))
+    np.testing.assert_array_equal(subsample_mask(8, 1.0), np.ones(8, bool))
+
+
+def test_invalid_options_raise():
+    cfg, st, _ = _random_tm(2, 4, 3)
+    with pytest.raises(ValueError, match="stage1_fraction"):
+        CascadeEngine(cfg, st, stage1_fraction=0.0)
+    with pytest.raises(ValueError, match="stage1_fraction"):
+        CascadeEngine(cfg, st, stage1_fraction=1.5)
+    with pytest.raises(ValueError, match="escalate to itself"):
+        CascadeEngine(cfg, st, full_backend="cascade")
+
+
+def test_registered_in_available_backends():
+    assert "cascade" in available_backends()
+
+
+# ------------------------------------------------- padding + traced path
+
+@pytest.mark.parametrize("pad_to", (8, 16, 32))
+def test_infer_padded_neutral(pad_to):
+    """Bucket padding (the serve path) never changes the first rows'
+    results, and the escalated aux mask is sliced like any other."""
+    cfg, st, lits = _random_tm(3, 10, 12, density=0.2, seed=2, batch=5)
+    eng = get_engine("cascade", cfg, st, stage1_fraction=0.5)
+    plain = eng.infer(lits)
+    padded = infer_padded(eng, np.asarray(lits), pad_to)
+    assert np.asarray(padded.prediction).shape[0] == 5
+    _assert_same(padded, plain)
+    np.testing.assert_array_equal(np.asarray(padded.aux["escalated"]),
+                                  np.asarray(plain.aux["escalated"]))
+
+
+@pytest.mark.parametrize("exact_sums", (True, False))
+def test_jit_traced_path_parity(exact_sums):
+    """Under jit the batch is a tracer — the cascade falls back to
+    stage1 + full on all rows + where-select, bit-identical to the
+    host path for predictions (and sums when exact)."""
+    cfg, st, lits = _random_tm(3, 10, 12, density=0.2, seed=4)
+    eng = get_engine("cascade", cfg, st, stage1_fraction=0.5,
+                     exact_sums=exact_sums)
+    host = eng.infer(lits)
+    jitted = jax.jit(lambda x: eng.infer(x))(lits)
+    _assert_same(jitted, host, sums=exact_sums)
+    np.testing.assert_array_equal(np.asarray(jitted.aux["escalated"]),
+                                  np.asarray(host.aux["escalated"]))
+
+
+# ------------------------------------------------------- cache + serving
+
+def test_engine_cache_distinguishes_opts():
+    cfg, st, _ = _random_tm(3, 10, 12, seed=6)
+    a = get_engine("cascade", cfg, st, stage1_fraction=0.5)
+    b = get_engine("cascade", cfg, st, stage1_fraction=0.5)
+    c = get_engine("cascade", cfg, st, stage1_fraction=0.75)
+    assert a is b and a is not c
+    info = engine_cache_info()
+    assert {"size", "maxsize", "hits", "misses", "evictions"} <= set(info)
+
+
+def test_server_shed_tier_end_to_end():
+    """A server with ``shed_backend="cascade"`` at ``shed_qdepth=0``
+    sheds every batch: responses stay bit-exact per request, the tier
+    counters account for every row, and stats() exposes the
+    engine-cache block."""
+    cfg, st, _ = _random_tm(3, 10, 12, density=0.2, seed=8)
+    policy = ServePolicy(max_batch=8, max_wait_us=500,
+                         backend="swar_packed", shed_backend="cascade",
+                         shed_qdepth=0,
+                         shed_opts={"stage1_fraction": 0.5})
+    rng = np.random.default_rng(12)
+    batches = [rng.integers(0, 2, (n, cfg.n_literals), dtype=np.int8)
+               for n in (1, 3, 8, 2)]
+    oracle = get_engine("oracle", cfg, st)
+
+    async def go():
+        async with TMServer(cfg, st, policy) as server:
+            results = await asyncio.gather(
+                *[server.submit(b) for b in batches])
+            return results, server.stats()
+
+    results, stats = asyncio.run(go())
+    for lits, res in zip(batches, results):
+        ref = oracle.infer(jnp.asarray(lits))
+        np.testing.assert_array_equal(np.asarray(res.prediction),
+                                      np.asarray(ref.prediction))
+    tiers = stats["tiers"]
+    assert tiers["shed_backend"] == "cascade"
+    assert tiers["shed_batches"] >= 1
+    assert tiers["shed_rows"] == sum(len(b) for b in batches)
+    assert tiers["cascade_rows"] == tiers["shed_rows"]
+    assert 0.0 <= tiers["escalation_rate"] <= 1.0
+    assert tiers["escalated_rows"] <= tiers["cascade_rows"]
+    cache = stats["engine_cache"]
+    assert {"size", "maxsize", "hits", "misses", "evictions"} <= set(cache)
+
+
+def test_server_routes_bucket_to_cascade():
+    """The cascade is an ordinary registered backend, so per-bucket
+    routing entries (explicit here; ``serve_best`` measured entries
+    follow the same path) can name it directly — responses stay
+    bit-exact and the tier counters see its rows."""
+    cfg, st, _ = _random_tm(3, 10, 12, density=0.2, seed=10)
+    policy = ServePolicy(max_batch=8, max_wait_us=500)
+    routes = {1: "cascade", 2: "cascade", 4: "cascade", 8: "cascade"}
+    rng = np.random.default_rng(13)
+    lits = rng.integers(0, 2, (6, cfg.n_literals), dtype=np.int8)
+    ref = get_engine("oracle", cfg, st).infer(jnp.asarray(lits))
+
+    async def go():
+        async with TMServer(cfg, st, policy, routing=routes) as server:
+            res = await server.submit(lits)
+            return res, server.stats()
+
+    res, stats = asyncio.run(go())
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
+    assert stats["routing"] == {"1": "cascade", "2": "cascade",
+                                "4": "cascade", "8": "cascade"}
+    assert stats["tiers"]["cascade_rows"] == 6
+
+
+def test_server_without_shed_reports_inactive_tier():
+    cfg, st, _ = _random_tm(2, 6, 9, seed=1)
+    policy = ServePolicy(max_batch=4, max_wait_us=500,
+                         backend="swar_packed")
+
+    async def go():
+        async with TMServer(cfg, st, policy) as server:
+            await server.submit(np.zeros((2, cfg.n_literals), np.int8))
+            return server.stats()
+
+    stats = asyncio.run(go())
+    tiers = stats["tiers"]
+    assert tiers["shed_backend"] is None
+    assert tiers["shed_batches"] == 0 and tiers["cascade_rows"] == 0
+
+
+def test_unknown_shed_backend_rejected():
+    cfg, st, _ = _random_tm(2, 6, 9, seed=1)
+    policy = ServePolicy(max_batch=4, backend="swar_packed",
+                         shed_backend="fpga")
+    with pytest.raises(ValueError, match="shed_backend"):
+        TMServer(cfg, st, policy)
+
+
+def test_resolved_shed_opts_defaults_fast_sums():
+    p = ServePolicy(shed_backend="cascade")
+    assert p.resolved_shed_opts()["exact_sums"] is False
+    p2 = ServePolicy(shed_backend="cascade",
+                     shed_opts={"exact_sums": True, "stage1_fraction": 0.75})
+    opts = p2.resolved_shed_opts()
+    assert opts["exact_sums"] is True and opts["stage1_fraction"] == 0.75

@@ -111,6 +111,45 @@ def test_async_latency_data_dependent():
     assert float(lat_s[0]) < float(lat_w[0])
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 40), st.integers(1, 12))
+def test_margin_rank_consistency_property(c, m, b):
+    """Race margins ↔ exact vote sums, on the ideal device (§III-A1).
+
+    With zero variation the chain delay is *affine* in the signed vote
+    count: ``delay(c) = M·d_high − Δ·(votes(c) + n_neg)`` (the low-net
+    count is fired positives plus unfired negatives).  So per-row: the
+    delay matrix matches the affine form, every pairwise delay gap is
+    ``−Δ ×`` the vote gap (delay order is vote order, inverted), and the
+    arbiter's winner is the exact tournament argmax wherever the top-2
+    votes are distinct (equal votes give equal ideal delays up to
+    summation order, which is the race's legitimately ambiguous case)."""
+    cfg = PDLConfig(sigma_elem=0.0, sigma_noise=0.0, t_res=0.0)
+    dev = PDLDevice(elem_offset=jnp.zeros((c, m, 2)), skew=jnp.zeros((c,)))
+    pol = clause_polarity(m)
+    rng = np.random.default_rng(c * 7919 + m * 31 + b)
+    bits = jnp.asarray(rng.integers(0, 2, (b, c, m), dtype=np.int8))
+    delays = np.asarray(pdl_delays(cfg, dev, bits, pol), np.float64)
+    votes = np.asarray(signed_vote_count(bits, pol[None, None]), np.int64)
+    n_neg = int(np.asarray(pol < 0).sum())
+
+    ideal = m * cfg.d_high - cfg.delta * (votes + n_neg)
+    np.testing.assert_allclose(delays, ideal, rtol=1e-5)
+
+    dv = votes[:, :, None] - votes[:, None, :]
+    dd = delays[:, :, None] - delays[:, None, :]
+    off = dv != 0
+    np.testing.assert_array_equal(np.sign(dd[off]), -np.sign(dv[off]))
+    np.testing.assert_allclose(dd[off], -cfg.delta * dv[off], rtol=1e-4)
+
+    res = race(cfg, jnp.asarray(delays.astype(np.float32)))
+    exact = np.asarray(argmax_tournament(jnp.asarray(votes)))
+    srt = np.sort(votes, axis=1)
+    clear = srt[:, -1] != srt[:, -2]
+    np.testing.assert_array_equal(np.asarray(res.winner)[clear],
+                                  exact[clear])
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(2, 12), st.integers(2, 60), st.integers(1, 16))
 def test_race_winner_is_argmin_property(c, m, b):
