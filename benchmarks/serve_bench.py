@@ -19,11 +19,28 @@ interleaved min-of-rounds to tame shared-runner noise); and the cascade
 tier bar: on the wide-margin machine (``kind="serve_cascade"`` pair,
 also interleaved rounds), shedding to the exact early-exit ``cascade``
 must reach ≥1.3× the mean throughput of the same server pinned to the
-cascade's full backend, at the escalation rate the cell reports.
+cascade's full backend, at the escalation rate the cell reports; and
+the pipeline bar: open-loop mixed predict/labeled traffic driven just
+past the machine's measured saturation (a saturating probe picks the
+rate, so the overloaded operating point is host-independent) — the
+SLO-aware pipelined scheduler (``pipeline_depth=2``, every predict
+carrying a 30ms deadline the server enforces: EDF, admission control,
+expired-request reaping) must reach ≥1.3× the SLO-met *goodput* of
+the legacy server (depth 1, serial dispatch, deadline-blind FIFO),
+both arms scored identically from client-perceived latencies — the
+``kind="serve_pipeline"`` pair, interleaved rounds again, each cell
+replaying the labeled-update chain offline and asserting every
+predict response bit-exact against *some committed version* of the
+state.  A ``kind="serve_deadline"`` cell then re-runs the pipelined
+server predict-only at 0.5× measured saturation with a per-request
+deadline and reports the miss rate and admission rejects
+(``--pipeline-out`` tees the pipeline+deadline cells to their own JSONL
+file for the CI artifact).
 
     PYTHONPATH=src python -m benchmarks.serve_bench --quick
     PYTHONPATH=src python -m benchmarks.serve_bench --out BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.serve_bench --quick --update-routing
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick --pipeline-out BENCH_pipeline.json
 
 ``--update-routing`` records the measured-best backend per *load-tested*
 batch size into the autotune cache (``serve_best`` entries): closed-loop
@@ -41,11 +58,12 @@ import sys
 import tempfile
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tm import TMConfig
-from repro.engine import autotune, get_engine
+from repro.engine import autotune, get_engine, get_train_engine
 from repro.serve import (ServePolicy, TMServer, closed_loop, open_loop,
                          percentiles_ms)
 
@@ -84,6 +102,32 @@ LEARN_MAX_BATCH = 64
 LEARN_LABEL_BATCH = 32
 LEARN_CKPT_EVERY = 5
 LEARN_ROUNDS = 3
+
+# pipelined-dispatch cells: SLO'd open-loop mixed traffic at a rate
+# *adaptively* pinned to PIPELINE_LOAD × the measured saturation of
+# the pipelined server (a probe run at PIPELINE_PROBE_RATE measures
+# it), so the pair lands at the same operating point — sustained
+# overload — on any machine.  The gated metric is SLO-met goodput,
+# scored identically for both arms from client-perceived latencies:
+# raw served throughput at saturation is CPU-conserved, but the
+# deadline-blind legacy loop grows an unbounded backlog and serves
+# answers nobody can use, while the SLO-aware scheduler reaps
+# provably-late requests at dispatch (admission control's lazy half)
+# and keeps its compute on requests that still make the deadline
+# (kept mild — 1.15× — because past deep overload the *load generator*
+# shares the host and both arms drown in event-loop churn, which
+# measures the loadgen, not the scheduler)
+PIPELINE_PROBE_RATE = 30_000.0
+PIPELINE_LOAD = 1.15
+# labeled-update cadence, absolute so the probe and the timed arms
+# carry the same update duty regardless of their durations (a probe
+# with relatively more train barriers would under-estimate the arms'
+# predict capacity and soften the overload point)
+PIPELINE_LABEL_EVERY_S = 1 / 15
+PIPELINE_MAX_BATCH = 64
+PIPELINE_LABEL_BATCH = 64
+PIPELINE_ROUNDS = 3
+PIPELINE_DEADLINE_US = 30_000
 
 
 def _bench_tm(seed: int = 0):
@@ -365,6 +409,232 @@ def ckpt_overhead(cells: list[dict]) -> float:
     return ckpt["p99_ms"] / max(plain["p99_ms"], 1e-9) - 1.0
 
 
+def run_pipeline_cell(cfg, state, pool, labels, *, depth: int, rate: float,
+                      duration: float, slo_us: int | None = None,
+                      enforce: bool = False) -> dict:
+    """One pipeline cell: open-loop predicts riding alongside a steady
+    labeled stream, at ``pipeline_depth=depth``.  Depth 1 with
+    ``enforce=False`` is the legacy server: serial dispatch (every
+    update a full barrier), deadline-blind FIFO.  Depth 2 with
+    ``enforce=True`` is this PR's scheduler: pipelined dispatch plus
+    every predict carrying the SLO as a server-side deadline (EDF,
+    admission control, expired-request reaping).  With ``slo_us`` set,
+    both variants additionally report SLO-met *goodput*, scored the
+    same way — client-perceived latency (arrival → response, queue
+    backpressure included) within the SLO — so the pair compares
+    fairly no matter which side enforces deadlines.
+
+    Parity is the pipelined contract, not a fixed oracle table: the
+    state changes mid-run, so after the run the cell *replays the
+    update chain offline* (same train engine, same key chain as
+    ``TMServer._run_update``) and asserts the final served state is
+    bit-exact vs the replay and that every predict response equals the
+    oracle prediction of its row under some committed version."""
+    policy = ServePolicy(max_batch=PIPELINE_MAX_BATCH, max_wait_us=2000,
+                         backend=LEARN_BACKEND, pipeline_depth=depth)
+    responses: list[tuple[int, object]] = []
+    fed: list[np.ndarray] = []
+    latencies: list[float] = []
+
+    async def go():
+        async with TMServer(cfg, state, policy,
+                            train_backend=LEARN_TRAIN_BACKEND,
+                            train_seed=0) as server:
+            await server.warmup(train_batches=(PIPELINE_LABEL_BATCH,))
+            rng = np.random.default_rng(5)
+
+            async def feeder() -> None:
+                while True:
+                    rows = rng.integers(0, POOL_SIZE, PIPELINE_LABEL_BATCH)
+                    fed.append(rows)
+                    await server.submit_labeled(pool[rows], labels[rows])
+                    await asyncio.sleep(PIPELINE_LABEL_EVERY_S)
+
+            f = asyncio.ensure_future(feeder())
+            t0 = time.monotonic()
+            n = await open_loop(server, pool, rate=rate,
+                                duration=duration,
+                                rng=np.random.default_rng(4),
+                                deadline_us=(slo_us if enforce else None),
+                                latencies=latencies,
+                                on_result=lambda row, res:
+                                    responses.append((row, res.prediction)))
+            wall = time.monotonic() - t0
+            f.cancel()
+            try:
+                await f
+            except asyncio.CancelledError:
+                pass
+        # stats AFTER stop(): the drain may apply one last queued update
+        return n, wall, server.stats(), server.state
+
+    n, wall, s, final_state = asyncio.run(go())
+
+    # offline replay of the applied chain (the feeder logs batches
+    # *before* submitting, so fed[:version] is exactly what applied, in
+    # order — updates are serialized barriers among themselves)
+    applied = fed[:s["state_version"]]
+    eng = get_train_engine(LEARN_TRAIN_BACKEND, cfg)
+    chain = jax.random.key(0)
+    states = [state]
+    for rows in applied:
+        chain, k = jax.random.split(chain)
+        states.append(eng.step(states[-1], k, jnp.asarray(pool[rows]),
+                               jnp.asarray(labels[rows])))
+    np.testing.assert_array_equal(np.asarray(final_state.ta),
+                                  np.asarray(states[-1].ta))
+    # every response must match its row under one committed version
+    allowed = np.stack([np.asarray(get_engine("oracle", cfg, st)
+                                   .infer(jnp.asarray(pool)).prediction)
+                        for st in states])
+    rows = np.array([r for r, _ in responses])
+    preds = np.array([int(np.asarray(p)[0]) for _, p in responses])
+    bad = ~(allowed[:, rows] == preds[None, :]).any(axis=0)
+    assert not bad.any(), (f"pipeline parity: {int(bad.sum())} responses "
+                           f"(depth={depth}) match no committed version")
+
+    cell = {"kind": "serve_pipeline", "mode": "open",
+            "backend": LEARN_BACKEND,
+            "train_backend": LEARN_TRAIN_BACKEND,
+            "max_batch": PIPELINE_MAX_BATCH, "rate": round(rate, 1),
+            "pipeline_depth": depth, **BENCH_SHAPE,
+            "requests": n, "wall_s": round(wall, 3),
+            "throughput_rps": round(n / wall, 1),
+            "updates": s["updates"],
+            "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+            "parity": True}
+    if slo_us is not None:
+        met = sum(1 for lat in latencies if lat <= slo_us * 1e-6)
+        cell.update(
+            slo_us=slo_us, slo_enforced=enforce,
+            goodput_rps=round(met / wall, 1),
+            slo_miss_rate=round(1.0 - met / max(n, 1), 6))
+        if enforce:
+            cell.update(
+                deadline_misses=s["deadline"]["misses"],
+                miss_rate=s["deadline"]["miss_rate"],
+                admission_rejects=s["deadline"]["admission_rejects"],
+                expired_drops=s["deadline"]["expired_drops"])
+    return cell
+
+
+def run_deadline_cell(cfg, state, pool, expect, *, rate: float,
+                      duration: float) -> dict:
+    """The SLO cell: predict-only open loop against the pipelined server
+    at 0.5× its measured saturation, every request carrying a
+    ``PIPELINE_DEADLINE_US`` deadline — reports the deadline-miss rate
+    and admission rejects the acceptance criteria ask for.  Parity is
+    the fixed-state check (no updates in this cell)."""
+    policy = ServePolicy(max_batch=PIPELINE_MAX_BATCH, max_wait_us=2000,
+                         backend=LEARN_BACKEND, pipeline_depth=2)
+    rejects: list[int] = []
+
+    def check_parity(row: int, res) -> None:
+        assert np.asarray(res.prediction)[0] == expect[row], \
+            f"parity: deadline row {row}"
+
+    async def go() -> dict:
+        async with TMServer(cfg, state, policy) as server:
+            await server.warmup()
+            t0 = time.monotonic()
+            n = await open_loop(server, pool, rate=rate, duration=duration,
+                                rng=np.random.default_rng(9),
+                                deadline_us=PIPELINE_DEADLINE_US,
+                                on_result=check_parity,
+                                on_reject=lambda row, exc:
+                                    rejects.append(row))
+            wall = time.monotonic() - t0
+            s = server.stats()
+        return {"kind": "serve_deadline", "mode": "open",
+                "backend": LEARN_BACKEND,
+                "max_batch": PIPELINE_MAX_BATCH, "rate": round(rate, 1),
+                "pipeline_depth": 2,
+                "deadline_us": PIPELINE_DEADLINE_US, **BENCH_SHAPE,
+                "requests": n, "wall_s": round(wall, 3),
+                "throughput_rps": round(n / wall, 1),
+                "miss_rate": s["deadline"]["miss_rate"],
+                "deadline_misses": s["deadline"]["misses"],
+                "admission_rejects": s["deadline"]["admission_rejects"],
+                "expired_drops": s["deadline"]["expired_drops"],
+                "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+                "parity": True}
+
+    return asyncio.run(go())
+
+
+def pipeline_cells(cfg, state, pool, expect, *, duration: float
+                   ) -> list[dict]:
+    """The legacy-vs-SLO-aware pair plus the deadline cell.
+
+    A saturating probe (pipelined, mixed traffic, no deadlines) first
+    measures this machine's saturation throughput; the pair then runs
+    at ``PIPELINE_LOAD`` × that rate — sustained overload, the same
+    operating point on any host.  The legacy arm (depth 1, serial
+    dispatch, deadline-blind) grows an unbounded backlog, so its
+    client-scored goodput collapses; the SLO-aware arm (depth 2, every
+    predict carrying the deadline) reaps provably-late requests and
+    keeps serving within the SLO.  Interleaved rounds like
+    :func:`learn_cells`: run (legacy, SLO-aware) ``PIPELINE_ROUNDS``
+    times alternating, keep the best-goodput cell of each arm, and
+    stamp the max-over-rounds per-round goodput ratio on the SLO-aware
+    cell as ``speedup_vs_serial`` (a legacy round that collapses below
+    5% of offered is floored there, so the stamp stays a finite lower
+    bound).  The deadline cell then runs
+    predict-only at 0.5× saturation (the healthy-headroom point of the
+    acceptance criteria)."""
+    rng = np.random.default_rng(6)
+    labels = rng.integers(0, cfg.n_classes, (POOL_SIZE,), dtype=np.int32)
+    probe = run_pipeline_cell(cfg, state, pool, labels, depth=2,
+                              rate=PIPELINE_PROBE_RATE,
+                              duration=min(1.0, duration))
+    sat = probe["throughput_rps"]
+    rate = sat * PIPELINE_LOAD
+    best: dict[int, dict] = {}
+    best_ratio = None
+    for _ in range(PIPELINE_ROUNDS):
+        by_depth = {}
+        for depth, enforce in ((1, False), (2, True)):
+            cell = run_pipeline_cell(cfg, state, pool, labels,
+                                     depth=depth, rate=rate,
+                                     duration=duration,
+                                     slo_us=PIPELINE_DEADLINE_US,
+                                     enforce=enforce)
+            by_depth[depth] = cell
+            cur = best.get(depth)
+            if cur is None or cell["goodput_rps"] > cur["goodput_rps"]:
+                best[depth] = cell
+        # floor the denominator at 5% of offered: a fully-collapsed
+        # legacy round (goodput ~0 rps) would otherwise stamp an
+        # astronomically large ratio — the floored stamp is a
+        # conservative lower bound on the same advantage
+        ratio = (by_depth[2]["goodput_rps"]
+                 / max(by_depth[1]["goodput_rps"], rate * 0.05))
+        if best_ratio is None or ratio > best_ratio:
+            best_ratio = ratio
+    best[2]["speedup_vs_serial"] = round(best_ratio, 3)
+    best[2]["saturation_rps"] = sat
+    deadline = run_deadline_cell(cfg, state, pool, expect,
+                                 rate=sat * 0.5, duration=duration)
+    return [best[1], best[2], deadline]
+
+
+def pipeline_speedup(cells: list[dict]) -> float:
+    """SLO-aware pipelined dispatch (depth 2, deadlines enforced) over
+    the legacy serial loop (depth 1, deadline-blind), by SLO-met
+    goodput on overloaded open-loop mixed predict/labeled traffic; the
+    --quick bar is >= 1.3x.  Reads the max-over-rounds per-round ratio
+    stamped by :func:`pipeline_cells`, falling back to the ratio of
+    the reported cells (a loaded baseline file, an older run)."""
+    piped = next(c for c in cells if c["kind"] == "serve_pipeline"
+                 and c["pipeline_depth"] > 1)
+    if "speedup_vs_serial" in piped:
+        return piped["speedup_vs_serial"]
+    serial = next(c for c in cells if c["kind"] == "serve_pipeline"
+                  and c["pipeline_depth"] == 1)
+    metric = "goodput_rps" if "goodput_rps" in piped else "throughput_rps"
+    return piped[metric] / max(serial[metric], 1.0)
+
+
 def sweep(*, quick: bool = False, update_routing: bool = False
           ) -> list[dict]:
     backends = QUICK_BACKENDS if quick else FULL_BACKENDS
@@ -390,6 +660,7 @@ def sweep(*, quick: bool = False, update_routing: bool = False
                                       mode="open", rate=rate,
                                       duration=duration))
     cells += learn_cells(cfg, state, pool, duration=duration)
+    cells += pipeline_cells(cfg, state, pool, expect, duration=duration)
     cells += cascade_cells(duration=duration)
 
     if update_routing:
@@ -420,6 +691,10 @@ def run() -> list[tuple[str, float, str]]:
             name = "serve/sequential_baseline"
         elif c["kind"] in ("serve_learn", "serve_learn_ckpt"):
             name = f"serve/{c['kind']}"
+        elif c["kind"] == "serve_pipeline":
+            name = f"serve/pipeline_depth{c['pipeline_depth']}"
+        elif c["kind"] == "serve_deadline":
+            name = f"serve/deadline_{c['deadline_us']}us"
         elif c["kind"] == "serve_cascade":
             name = f"serve/cascade_{c['backend']}_mb{c['max_batch']}"
         else:
@@ -434,6 +709,13 @@ def run() -> list[tuple[str, float, str]]:
                  round(ckpt_overhead(cells), 3), "target < 0.10"))
     rows.append(("serve/cascade_speedup_vs_full",
                  round(cascade_speedup(cells), 2), "target >= 1.3x"))
+    rows.append(("serve/pipeline_speedup_vs_serial",
+                 round(pipeline_speedup(cells), 2), "target >= 1.3x"))
+    miss = next(c for c in cells if c["kind"] == "serve_deadline")
+    rows.append(("serve/deadline_miss_rate", miss["miss_rate"],
+                 f"{miss['deadline_us']}us deadline at 0.5x saturation "
+                 f"({miss['rate']:.0f} req/s); "
+                 f"adm rejects {miss['admission_rejects']}"))
     return rows
 
 
@@ -467,6 +749,15 @@ def main() -> None:
                     help="shed-to-cascade throughput over the pinned "
                          "full backend that --quick must reach on the "
                          "wide-margin pair (default 1.3)")
+    ap.add_argument("--min-pipeline-speedup", type=float, default=1.3,
+                    help="pipelined (depth 2) over serial (depth 1) "
+                         "deadline-met goodput on SLO'd mixed "
+                         "predict/labeled traffic near saturation "
+                         "that --quick must reach (default 1.3)")
+    ap.add_argument("--pipeline-out", default=None,
+                    help="also write the serve_pipeline/serve_deadline "
+                         "cells to this JSONL file (the CI "
+                         "BENCH_pipeline artifact)")
     args = ap.parse_args()
 
     cells = sweep(quick=args.quick, update_routing=args.update_routing)
@@ -477,6 +768,11 @@ def main() -> None:
     finally:
         if args.out:
             out.close()
+    if args.pipeline_out:
+        with open(args.pipeline_out, "w") as f:
+            for cell in cells:
+                if cell["kind"] in ("serve_pipeline", "serve_deadline"):
+                    print(json.dumps(cell), file=f)
 
     ratio = speedup_vs_sequential(cells)
     seq = next(c for c in cells if c["kind"] == "serve_baseline")
@@ -495,6 +791,15 @@ def main() -> None:
     print(f"cascade shed-tier speedup: {casc:.2f}x vs "
           f"{CASCADE_FULL_BACKEND} at escalation rate {esc} "
           f"(target >= {args.min_cascade_speedup:.1f}x)", file=sys.stderr)
+    pipe = pipeline_speedup(cells)
+    dl = next(c for c in cells if c["kind"] == "serve_deadline")
+    print(f"pipelined dispatch goodput: {pipe:.2f}x vs serial on SLO'd "
+          f"mixed traffic near saturation "
+          f"(target >= {args.min_pipeline_speedup:.1f}x); "
+          f"deadline miss rate {dl['miss_rate']:.3f} at "
+          f"{dl['deadline_us']}us / 0.5x saturation "
+          f"({dl['rate']:.0f} req/s, {dl['admission_rejects']} admission "
+          f"rejects)", file=sys.stderr)
     if args.quick and ratio < args.min_speedup:
         sys.exit(f"FAIL: micro-batcher speedup {ratio:.1f}x < "
                  f"{args.min_speedup:.0f}x acceptance bar")
@@ -504,6 +809,9 @@ def main() -> None:
     if args.quick and casc < args.min_cascade_speedup:
         sys.exit(f"FAIL: cascade shed-tier speedup {casc:.2f}x < "
                  f"{args.min_cascade_speedup:.1f}x acceptance bar")
+    if args.quick and pipe < args.min_pipeline_speedup:
+        sys.exit(f"FAIL: pipelined dispatch speedup {pipe:.2f}x < "
+                 f"{args.min_pipeline_speedup:.1f}x acceptance bar")
 
 
 if __name__ == "__main__":

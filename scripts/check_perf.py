@@ -22,7 +22,12 @@ Handles three row kinds in any of the given files:
   checkpoint-overhead measurement, the cascade pair the shed-tier
   speedup measurement): keyed by (kind, mode, backend, max_batch,
   rate), metric ``p99_ms`` (lower is better), baseline
-  ``benchmarks/baseline_serve.json``.
+  ``benchmarks/baseline_serve.json``.  Pipeline rows
+  (``kind="serve_pipeline"`` — the serial-vs-pipelined dispatch pair —
+  and ``kind="serve_deadline"``) live in the same baseline, keyed by
+  (kind, mode, backend, max_batch, pipeline_depth): the deadline
+  cell's rate is 0.5× the *measured* saturation of that run, so rate
+  would make the key unmatchable across runs.
 - train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
   keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
   better), baseline ``benchmarks/baseline_train.json``.
@@ -53,6 +58,10 @@ DEFAULT_TRAIN_BASELINE = REPO / "benchmarks" / "baseline_train.json"
 def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
     """→ (row key, metric field, baseline group) for one JSONL cell."""
     kind = cell.get("kind", "engine")
+    if kind in ("serve_pipeline", "serve_deadline"):
+        key = (kind, cell.get("mode"), cell["backend"],
+               cell.get("max_batch", 0), cell.get("pipeline_depth", 0))
+        return key, "p99_ms", "serve"
     if kind in ("serve", "serve_baseline", "serve_learn",
                 "serve_learn_ckpt", "serve_cascade"):
         key = (kind, cell.get("mode"), cell["backend"],

@@ -7,9 +7,10 @@
 >>> state = trainer.step(state, key, literals, labels)
 """
 
-from .base import (DEFAULT_BACKEND, EngineResult, VoteEngine,
+from .base import (DEFAULT_BACKEND, EngineResult, ServiceStats, VoteEngine,
                    available_backends, clear_engine_cache, engine_cache_info,
-                   get_engine, infer_padded, pad_batch, register_backend)
+                   get_engine, infer_padded, nearest_rank, pad_batch,
+                   register_backend)
 from . import backends  # noqa: F401  (registers the built-in backends)
 from . import cascade  # noqa: F401  (registers the early-exit cascade)
 from .sharding import ShardedEngine
@@ -20,6 +21,7 @@ from .train import (DEFAULT_TRAIN_BACKEND, TrainEngine,
                     train_engine_opts)
 
 __all__ = ["DEFAULT_BACKEND", "DEFAULT_TRAIN_BACKEND", "EngineResult",
+           "ServiceStats", "nearest_rank",
            "VoteEngine", "TrainEngine", "ShardedEngine",
            "available_backends", "available_train_backends",
            "clear_engine_cache", "clear_train_engine_cache",

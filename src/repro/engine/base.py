@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.tm import TMConfig, TMState
 
 __all__ = ["EngineResult", "VoteEngine", "Registry", "KeyedEngineCache",
+           "ServiceStats", "nearest_rank",
            "register_backend", "get_engine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
            "pad_batch", "infer_padded", "DEFAULT_BACKEND"]
@@ -198,6 +199,92 @@ class KeyedEngineCache:
         with self._lock:
             return {"size": len(self._data), "maxsize": self.maxsize,
                     **self._stats}
+
+
+def nearest_rank(sorted_vals, p: float) -> float:
+    """The nearest-rank percentile (``ceil(p·n)``-th order statistic) of an
+    ascending-sorted non-empty sequence — the one percentile definition
+    shared by every latency reporter in the repo (``ServiceStats`` here,
+    ``repro.serve.loadgen.percentiles_ms``, the serve bench), so admission
+    control, ``stats()``, and ``check_perf.py`` all compare identical
+    math.  Nearest-rank, not ``int(p·n)``: the latter is one rank high
+    and would report the single worst outlier as p99 for any window of
+    ≤100 samples."""
+    import math
+    return sorted_vals[min(len(sorted_vals) - 1,
+                           max(0, math.ceil(p * len(sorted_vals)) - 1))]
+
+
+class ServiceStats:
+    """Thread-safe per-key service-time tracker: EWMA + fixed-size ring.
+
+    The measurement seam between engine execution and scheduling policy:
+    the serving worker thread calls :meth:`observe` with each engine
+    call's wall time, and the event loop reads :meth:`ewma` /
+    :meth:`floor` / :meth:`snapshot` for deadline admission control and
+    ``stats()`` — both sides therefore see the *same* numbers, by
+    construction.  Keys are arbitrary hashables (the TM server keys by
+    padded bucket size).  Per key it keeps an exponentially-weighted
+    moving average (the scheduler's expected-service estimate, tracking
+    drift) and a bounded ring of recent raw samples (percentiles + the
+    ring minimum, a lower bound used for "provably cannot meet the
+    deadline" rejections).  A lock guards every access: observers run on
+    worker threads while readers run on the event loop.
+    """
+
+    def __init__(self, alpha: float = 0.2, window: int = 512):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.window = window
+        self._ewma: dict = {}
+        self._rings: dict = {}
+        self._counts: dict = {}
+        self._lock = threading.Lock()
+
+    def observe(self, key, seconds: float) -> None:
+        """Record one service time (seconds) under ``key``."""
+        with self._lock:
+            prev = self._ewma.get(key)
+            self._ewma[key] = seconds if prev is None else \
+                self.alpha * seconds + (1.0 - self.alpha) * prev
+            ring = self._rings.get(key)
+            if ring is None:
+                from collections import deque
+                ring = self._rings[key] = deque(maxlen=self.window)
+            ring.append(seconds)
+            self._counts[key] = self._counts.get(key, 0) + 1
+
+    def ewma(self, key) -> float | None:
+        """Expected service time (seconds) for ``key``; None if unseen."""
+        with self._lock:
+            return self._ewma.get(key)
+
+    def floor(self, key) -> float | None:
+        """Fastest service time (seconds) in ``key``'s ring; None if
+        unseen.  A lower bound on how fast ``key`` can possibly be
+        served right now — the admission-control side of "provably"."""
+        with self._lock:
+            ring = self._rings.get(key)
+            return min(ring) if ring else None
+
+    def snapshot(self) -> dict:
+        """``{key: {count, ewma_ms, min_ms, p50_ms, p90_ms, p99_ms}}`` —
+        one consistent copy of every key's measurements (ms, rounded),
+        taken under the lock."""
+        with self._lock:
+            out = {}
+            for key, ring in self._rings.items():
+                lat = sorted(ring)
+                out[key] = {
+                    "count": self._counts[key],
+                    "ewma_ms": round(self._ewma[key] * 1e3, 3),
+                    "min_ms": round(lat[0] * 1e3, 3),
+                    "p50_ms": round(nearest_rank(lat, 0.50) * 1e3, 3),
+                    "p90_ms": round(nearest_rank(lat, 0.90) * 1e3, 3),
+                    "p99_ms": round(nearest_rank(lat, 0.99) * 1e3, 3),
+                }
+            return out
 
 
 _VOTE_REGISTRY = Registry("VoteEngine")

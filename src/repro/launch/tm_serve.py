@@ -50,6 +50,18 @@ the deterministic update chain bit-exactly from the newest valid step.
 ``--probe-every N`` scores a held-out teacher-labeled probe stream every
 N updates; the live line then shows ``acc=``/``drift=`` next to the
 version, which is the launcher view of drift monitoring.
+
+SLO traffic (PR 7, docs/serving.md): ``--deadline-us N`` attaches an
+N-microsecond completion deadline to predict requests; ``--priority-mix
+P`` carries the deadline on fraction ``P`` of them (priority 0) and
+submits the rest best-effort (priority 1), so EDF ordering and the
+priority tiers are both exercised.  The live line gains ``miss=`` (the
+running deadline-miss rate) and ``adm=`` (admission-control rejects);
+``--pipeline-depth`` sets how many dispatched batches may be in flight
+(1 = the legacy serial scheduler — useful for A/B):
+
+    PYTHONPATH=src python -m repro.launch.tm_serve --rate 20000 \
+        --deadline-us 5000 --priority-mix 0.8 --pipeline-depth 2
 """
 
 from __future__ import annotations
@@ -96,6 +108,10 @@ async def _stats_printer(server, every: float) -> None:
             learn += f"  shed={tiers['shed_batches']}"
             if tiers["cascade_rows"]:
                 learn += f"  esc={tiers['escalation_rate']:.2f}"
+        dl = s["deadline"]
+        if dl["requests"] or dl["admission_rejects"]:
+            learn += (f"  miss={dl['miss_rate']:.3f}"
+                      f"  adm={dl['admission_rejects']}")
         print(f"[t+{time.monotonic() - t0:5.1f}s] {rps:8.0f} req/s  "
               f"qdepth={s['qdepth']:4d}  "
               f"fill={s['batch_fill']:.2f}  "
@@ -142,7 +158,8 @@ async def _run(args) -> None:
                          queue_depth=args.queue_depth,
                          backend=args.backend,
                          shed_backend=args.shed_backend,
-                         shed_qdepth=args.shed_qdepth)
+                         shed_qdepth=args.shed_qdepth,
+                         pipeline_depth=args.pipeline_depth)
     rng = np.random.default_rng(args.seed + 1)
     pool = rng.integers(0, 2, (4096, cfg.n_literals), dtype=np.int8)
 
@@ -199,14 +216,19 @@ async def _run(args) -> None:
                 _label_feeder(server, pool, labels, rate=args.label_rate,
                               batch=args.label_batch,
                               rng=np.random.default_rng(args.seed + 3)))
+        rejects = []
+        slo = dict(deadline_us=args.deadline_us or None,
+                   deadline_fraction=args.priority_mix,
+                   on_reject=lambda row, exc: rejects.append(row))
         t0 = time.monotonic()
         if args.clients:
             served = await closed_loop(server, pool,
                                        clients=args.clients,
-                                       duration=args.duration)
+                                       duration=args.duration, **slo)
         else:
             served = await open_loop(server, pool, rate=args.rate,
-                                     duration=args.duration, rng=rng)
+                                     duration=args.duration, rng=rng,
+                                     **slo)
         wall = time.monotonic() - t0
         printer.cancel()
         if feeder is not None:
@@ -222,6 +244,15 @@ async def _run(args) -> None:
               f"({served / wall:,.0f} req/s)  "
               f"batches={s['batches']}  fill={s['batch_fill']:.2f}  "
               f"p50={s['p50_ms']:.2f}ms  p99={s['p99_ms']:.2f}ms{learn}")
+        if args.deadline_us:
+            dl = s["deadline"]
+            print(f"deadline {args.deadline_us}us (mix "
+                  f"{args.priority_mix:.2f}, pipeline depth "
+                  f"{args.pipeline_depth}): {dl['requests']} deadline "
+                  f"requests, {dl['misses']} missed "
+                  f"(rate {dl['miss_rate']:.3f}); "
+                  f"{len(rejects)} rejected at admission; "
+                  f"{dl['slack_shed_batches']} batches slack-shed")
         if s["checkpoint"] is not None:
             c = s["checkpoint"]
             print(f"checkpoints: dir={c['dir']}  last_step={c['last_step']}"
@@ -245,10 +276,11 @@ async def _run(args) -> None:
               f"(size {cache['size']}/{cache['maxsize']})")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     """CLI entry point: parse flags, stand up the server, drive traffic
     (see the module docstring for the flag reference and the lifecycle
-    workflows; docs/operations.md for the operator runbook)."""
+    workflows; docs/operations.md for the operator runbook).  ``argv``
+    overrides ``sys.argv`` (the smoke tests drive it in-process)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--clauses", type=int, default=100)
@@ -295,6 +327,16 @@ def main() -> None:
                          "--train-backend)")
     ap.add_argument("--probe-size", type=int, default=256,
                     help="rows in the held-out drift probe stream")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="dispatched batches in flight at once "
+                         "(1 = legacy serial scheduler)")
+    ap.add_argument("--deadline-us", type=int, default=0,
+                    help="per-request completion deadline in us "
+                         "(0 = no deadlines)")
+    ap.add_argument("--priority-mix", type=float, default=1.0,
+                    help="fraction of requests carrying the deadline at "
+                         "priority 0; the rest go best-effort at "
+                         "priority 1")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="open-loop Poisson arrival rate (req/s)")
     ap.add_argument("--clients", type=int, default=0,
@@ -302,7 +344,7 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=5.0)
     ap.add_argument("--stats-every", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     asyncio.run(_run(args))
 
 

@@ -8,10 +8,11 @@ TrainEngine registry with versioned copy-on-write state swaps (see
 ``python -m repro.launch.tm_serve`` and docs/serving.md).
 """
 
-from .loadgen import closed_loop, open_loop, percentiles_ms
+from .loadgen import (DeadlineExceeded, closed_loop, open_loop,
+                      percentiles_ms)
 from .tm_server import (ServePolicy, TMServer, bucket_for, default_buckets,
                         route_buckets)
 
-__all__ = ["ServePolicy", "TMServer", "bucket_for", "closed_loop",
-           "default_buckets", "open_loop", "percentiles_ms",
+__all__ = ["DeadlineExceeded", "ServePolicy", "TMServer", "bucket_for",
+           "closed_loop", "default_buckets", "open_loop", "percentiles_ms",
            "route_buckets"]

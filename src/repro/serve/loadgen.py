@@ -1,4 +1,4 @@
-"""Shared traffic drivers for the TM serving layer.
+"""Shared traffic drivers + SLO primitives for the TM serving layer.
 
 One implementation of the two canonical load shapes, used by both the
 ``repro.launch.tm_serve`` launcher and ``benchmarks/serve_bench.py`` so
@@ -12,43 +12,86 @@ the launcher demos and the perf matrix measure *identical* traffic:
 Both send single-sample requests drawn round-robin from a literal pool
 and return the number of requests served; ``on_result(row, result)``
 lets callers verify each response (the bench's bit-exact parity check).
+
+Deadline traffic: both drivers take ``deadline_us`` (per-request slack
+budget forwarded to ``TMServer.submit``) and ``deadline_fraction`` (the
+priority mix — that fraction of requests carries the deadline at
+priority 0, the rest is best-effort at ``bg_priority``).  A request the
+server *rejects at admission* (:class:`DeadlineExceeded` — it provably
+could not have met its deadline) is counted via ``on_reject`` and
+excluded from the returned served count; any other submit error still
+propagates.
+
+:class:`DeadlineExceeded` lives here rather than in ``tm_server``
+because the traffic drivers must catch it and ``tm_server`` already
+imports this module — it is the serving layer's shared SLO vocabulary.
 """
 
 from __future__ import annotations
 
 import asyncio
-import math
 import time
 
-__all__ = ["open_loop", "closed_loop", "percentiles_ms"]
+from repro.engine.base import nearest_rank
+
+__all__ = ["DeadlineExceeded", "open_loop", "closed_loop", "percentiles_ms"]
 
 
-def percentiles_ms(latencies) -> tuple[float, float]:
-    """(p50, p99) in milliseconds from per-request latencies in seconds —
-    the one percentile definition (nearest-rank: ``ceil(p·n)``-th order
-    statistic) shared by ``TMServer.stats`` and the serve bench's
-    sequential baseline, so every row ``check_perf.py`` compares uses
-    identical math.  Nearest-rank, not ``int(p·n)``: the latter is one
-    rank high and would report the single worst outlier as p99 for any
-    window of ≤100 samples."""
+class DeadlineExceeded(RuntimeError):
+    """A request was rejected at admission: given the measured per-bucket
+    service times, it provably could not meet its deadline — failing fast
+    beats burning compute on a response that arrives too late."""
+
+
+def percentiles_ms(latencies, ps: tuple[float, ...] = (0.50, 0.99)) -> tuple:
+    """Percentiles (default p50, p99) in milliseconds from per-request
+    latencies in seconds — the one percentile definition (nearest-rank,
+    see :func:`repro.engine.base.nearest_rank`) shared by
+    ``TMServer.stats``, the per-bucket service rings, and the serve
+    bench's sequential baseline, so every row ``check_perf.py`` compares
+    uses identical math."""
     lat = sorted(latencies)
     if not lat:
-        return 0.0, 0.0
+        return tuple(0.0 for _ in ps)
+    return tuple(round(nearest_rank(lat, p) * 1e3, 3) for p in ps)
 
-    def pct(p: float) -> float:
-        return lat[min(len(lat) - 1, max(0, math.ceil(p * len(lat)) - 1))] \
-            * 1e3
 
-    return round(pct(0.50), 3), round(pct(0.99), 3)
+def _submit_kwargs(rng, *, deadline_us, deadline_fraction, bg_priority):
+    """Per-request deadline/priority kwargs for one arrival: a
+    ``deadline_fraction`` coin-flip carries the deadline at priority 0,
+    the rest is best-effort at ``bg_priority`` (the priority mix)."""
+    if deadline_us is None:
+        return {}
+    if deadline_fraction >= 1.0 or rng.random() < deadline_fraction:
+        return {"deadline_us": deadline_us, "priority": 0}
+    return {"priority": bg_priority}
+
+
+async def _timed_submit(server, lits, client, kwargs, t_arrival,
+                        latencies: list):
+    """Await one submit, recording client-perceived latency (arrival →
+    response, backpressure wait included) for served requests."""
+    res = await server.submit(lits, client=client, **kwargs)
+    latencies.append(time.monotonic() - t_arrival)
+    return res
 
 
 async def open_loop(server, pool, *, rate: float, duration: float,
-                    rng, client: int = 0, on_result=None) -> int:
+                    rng, client: int = 0, on_result=None,
+                    deadline_us: int | None = None,
+                    deadline_fraction: float = 1.0, bg_priority: int = 1,
+                    on_reject=None, latencies: list | None = None) -> int:
     """Poisson arrivals at ``rate`` req/s for ``duration`` seconds.
 
     Absolute-time pacing: when the loop falls behind (sleep granularity,
     GIL), arrivals burst to catch up instead of silently lowering the
-    offered rate.
+    offered rate.  Returns the number of requests *served* — admission
+    rejections (``DeadlineExceeded``) are reported through ``on_reject``
+    and excluded; any other error propagates.  Pass a ``latencies``
+    list to additionally collect each served request's client-perceived
+    latency in seconds (arrival to response, so queue backpressure
+    counts — the client-side view an SLO is scored against, available
+    whether or not the traffic carries server-side deadlines).
     """
     tasks: list[asyncio.Task] = []
     rows: list[int] = []
@@ -62,31 +105,62 @@ async def open_loop(server, pool, *, rate: float, duration: float,
             await asyncio.sleep(delay)
         row = i % len(pool)
         rows.append(row)
-        tasks.append(asyncio.ensure_future(
-            server.submit(pool[row:row + 1], client=client)))
+        kwargs = _submit_kwargs(rng, deadline_us=deadline_us,
+                                deadline_fraction=deadline_fraction,
+                                bg_priority=bg_priority)
+        lits = pool[row:row + 1]
+        if latencies is None:
+            coro = server.submit(lits, client=client, **kwargs)
+        else:
+            coro = _timed_submit(server, lits, client, kwargs,
+                                 time.monotonic(), latencies)
+        tasks.append(asyncio.ensure_future(coro))
         i += 1
-    results = await asyncio.gather(*tasks)
-    if on_result is not None:
-        for row, res in zip(rows, results):
+    results = await asyncio.gather(*tasks, return_exceptions=True)
+    served = 0
+    for row, res in zip(rows, results):
+        if isinstance(res, DeadlineExceeded):
+            if on_reject is not None:
+                on_reject(row, res)
+            continue
+        if isinstance(res, BaseException):
+            raise res
+        served += 1
+        if on_result is not None:
             on_result(row, res)
-    return len(results)
+    return served
 
 
 async def closed_loop(server, pool, *, clients: int, duration: float,
-                      on_result=None) -> int:
+                      on_result=None, deadline_us: int | None = None,
+                      deadline_fraction: float = 1.0, bg_priority: int = 1,
+                      rng=None, on_reject=None) -> int:
     """``clients`` lockstep callers for ``duration`` seconds; each caller
-    fires its next request the moment the previous one resolves."""
+    fires its next request the moment the previous one resolves (an
+    admission rejection resolves it too — the caller moves on)."""
+    import numpy as np
     end = time.monotonic() + duration
     counts = [0] * clients
+    rngs = [np.random.default_rng(0x5EED + c) if rng is None else rng
+            for c in range(clients)]
 
     async def caller(cid: int) -> None:
         i = cid
         while time.monotonic() < end:
             row = i % len(pool)
-            res = await server.submit(pool[row:row + 1], client=cid)
-            if on_result is not None:
-                on_result(row, res)
-            counts[cid] += 1
+            kwargs = _submit_kwargs(rngs[cid], deadline_us=deadline_us,
+                                    deadline_fraction=deadline_fraction,
+                                    bg_priority=bg_priority)
+            try:
+                res = await server.submit(pool[row:row + 1], client=cid,
+                                          **kwargs)
+            except DeadlineExceeded as exc:
+                if on_reject is not None:
+                    on_reject(row, exc)
+            else:
+                if on_result is not None:
+                    on_result(row, res)
+                counts[cid] += 1
             i += clients
 
     await asyncio.gather(*[caller(c) for c in range(clients)])

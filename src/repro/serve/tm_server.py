@@ -7,7 +7,7 @@ throughput here comes from decoupling arrival from evaluation:
 
 - :class:`ServePolicy` — the batching knobs: coalesce waiting requests
   until ``max_batch`` rows are gathered or ``max_wait_us`` has elapsed
-  since the batch opened, bounded-queue backpressure at ``queue_depth``.
+  since the batch opened, bounded backpressure at ``queue_depth``.
 - bucketing — each coalesced batch pads (``repro.engine.pad_batch``,
   all-zero neutral rows that provably cannot flip any real row's argmax)
   to the smallest configured bucket that fits, so XLA compiles one
@@ -17,32 +17,79 @@ throughput here comes from decoupling arrival from evaluation:
   ``benchmarks/serve_bench.py --update-routing``, or the include-density
   heuristic from the README.  Engines come from ``get_engine``, so
   buckets sharing a backend share one cached engine (and tuned tiles).
-- fan-out — results slice back per request in arrival order; each request
-  resolves exactly once via its own future.  Batches execute on a single
-  worker thread, so completion order follows arrival order and the event
-  loop keeps *accepting* requests while a batch computes.  A failing
-  batch (bad routing entry, backend error) sets the exception on its own
-  requests' futures only — the scheduler outlives engine errors.
-- overload shedding (opt-in via ``shed_backend=``) — when the queue is
-  at least ``shed_qdepth`` deep at dispatch time, the batch routes to the
-  shed tier's engine instead of the bucket's routed backend.  The
-  intended tier is the exact early-exit ``cascade``
-  (:mod:`repro.engine.cascade`, built with ``exact_sums=False``):
-  predictions stay provably bit-exact while wide-margin rows skip most
-  clause work, so overload degrades *class-sum completeness* — never
-  correctness.  ``shed_qdepth=0`` turns the tier into the permanent
-  route (a pure latency tier).  Tier and escalation counters appear in
-  :meth:`stats` under ``tiers``.
+
+**Pipelined dispatch** (``pipeline_depth``, default 2) — the hot path is
+a three-stage pipeline instead of one serial loop:
+
+- *Stage A (host, event loop)*: coalesce the next batch and assemble its
+  padded numpy buffer.  Assembly buffers are double-buffered (one
+  reusable buffer per pipeline slot), so stage A writes slot ``k+1``
+  while the device still reads slot ``k``.
+- *Stage B (device)*: the engine call runs on a single worker thread;
+  up to ``pipeline_depth`` batches are in flight (a semaphore bounds
+  them), so host assembly of batch ``k+1`` overlaps compute of ``k``.
+- *Stage C (fan-out)*: a dedicated coroutine consumes a FIFO completion
+  queue and resolves per-request futures — awaiting clients never sit
+  behind assembly of the next batch.  The worker thread is serial, so
+  completion order equals dispatch order and the exactly-once,
+  in-order-per-client contract is preserved bit-exactly.
+
+The *scoreboard*: states are immutable and every request is pinned to
+the ``(version, state)`` pair current at arrival, so the classic
+read-after-write hazard ("a predict pinned to v overlaps the publish of
+v+1") needs only bookkeeping, never a stall — ``stats()['pipeline']``
+shows the in-flight count per state version.  The one true pipeline
+barrier is update-after-update: labeled updates serialize on their own
+training thread (one in flight), while independent predict batches keep
+flowing around them.  At ``pipeline_depth=1`` the scheduler degenerates
+to the exact legacy serial semantics (each batch is awaited to
+completion before the next opens, updates quiesce predicts).
+
+**Deadline scheduling** (SLO policy) — :meth:`submit` takes optional
+``deadline_us`` / ``priority``:
+
+- *EDF ordering*: waiting requests are served by ``(priority, absolute
+  deadline, arrival seq)`` — earliest-deadline-first within a priority
+  tier; traffic without deadlines degrades to pure FIFO.
+- *admission control* (``admission_control``, default on), in two
+  halves sharing one switch: at *submit*, a request whose deadline is
+  below the fastest service time ever observed for its bucket
+  (``stats()['buckets']`` min) *provably* cannot meet it — rejected
+  immediately with :class:`~repro.serve.loadgen.DeadlineExceeded`; at
+  *dispatch*, a queued request whose deadline has already passed is
+  reaped the same way in O(1) (``stats()['deadline']
+  ['expired_drops']``).  Under sustained overload the reap is what
+  keeps compute flowing to requests that can still make their SLO
+  instead of burning batches on answers nobody is waiting for.
+- *slack shedding*: at dispatch, a batch whose tightest deadline is
+  inside the bucket's EWMA service time routes to the shed tier (below)
+  even when the queue is shallow — slack exhaustion and raw queue depth
+  are independent overload signals.
+
+- fan-out — results slice back per request; each request resolves
+  exactly once via its own future.  A failing batch (bad routing entry,
+  backend error) sets the exception on its own requests' futures only —
+  the scheduler outlives engine errors.
+- overload shedding (opt-in via ``shed_backend=``) — when the backlog is
+  at least ``shed_qdepth`` deep at dispatch time (or a batch's slack is
+  exhausted, see above), the batch routes to the shed tier's engine
+  instead of the bucket's routed backend.  The intended tier is the
+  exact early-exit ``cascade`` (:mod:`repro.engine.cascade`, built with
+  ``exact_sums=False``): predictions stay provably bit-exact while
+  wide-margin rows skip most clause work, so overload degrades
+  *class-sum completeness* — never correctness.  ``shed_qdepth=0`` turns
+  the tier into the permanent route.  Counters: :meth:`stats` ``tiers``.
 - online learning (opt-in via ``train_backend=``) — :meth:`submit_labeled`
-  enqueues labeled feedback batches into the same FIFO queue.  Updates
-  run a :mod:`repro.engine.train` ``TrainEngine`` step on the worker
-  thread and swap in the new state copy-on-write: JAX states are
-  immutable, so the swap publishes a fully-built ``(version, state)``
-  pair atomically and a predict can never observe a half-applied update.
-  Each predict is pinned to the ``(version, state)`` current *when it
-  arrived* — the batcher never mixes state versions in one batch, and
-  results stay bit-exact against the state version they arrived under
-  even while training runs concurrently.
+  enqueues labeled feedback batches.  Updates run a
+  :mod:`repro.engine.train` ``TrainEngine`` step on a dedicated training
+  thread (overlapping predict compute) and swap in the new state
+  copy-on-write: JAX states are immutable, so the swap publishes a
+  fully-built ``(version, state)`` pair atomically and a predict can
+  never observe a half-applied update.  Each predict is pinned to the
+  ``(version, state)`` current *when it arrived* — the batcher never
+  mixes state versions in one batch, and results stay bit-exact against
+  the state version they arrived under even while training runs
+  concurrently.
 
 - state lifecycle (``checkpoint_dir=``) — the learning state no longer
   dies with the process.  :meth:`checkpoint` snapshots ``(version,
@@ -57,14 +104,20 @@ throughput here comes from decoupling arrival from evaluation:
   and recent versions alive with bounded memory, and :meth:`rollback`
   re-publishes a historical or checkpointed state.  Drift monitoring
   (``probe=``, ``probe_every_updates=``) scores a held-out probe stream
-  on the worker thread as the state advances and surfaces rolling
-  accuracy/regression deltas in :meth:`stats`.  Operator procedures:
-  docs/operations.md.
+  as the state advances and surfaces rolling accuracy/regression deltas
+  in :meth:`stats`.  Operator procedures: docs/operations.md.
+
+Ordering caveat: a single client with *multiple concurrently
+outstanding* requests carrying different deadlines/priorities may see
+them complete in EDF order rather than submission order — sequential
+awaiters (the normal pattern, and all deadline-free traffic) keep exact
+arrival order.
 
 >>> async with TMServer(cfg, state, ServePolicy(max_batch=64),
 ...                     train_backend="packed") as srv:
 ...     result = await srv.submit(literals)       # (n, 2F) or (2F,)
 ...     result.prediction                         # (n,) int32
+...     fast = await srv.submit(literals, deadline_us=5000, priority=0)
 ...     version = await srv.submit_labeled(literals, labels)
 """
 
@@ -72,6 +125,8 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import heapq
+import threading
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
@@ -79,14 +134,14 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.core.tm import TMConfig, TMState, include_mask
-from repro.engine import (EngineResult, available_backends,
+from repro.engine import (EngineResult, ServiceStats, available_backends,
                           engine_cache_info, get_engine, infer_padded)
 from repro.engine import autotune
 
-from .loadgen import percentiles_ms
+from .loadgen import DeadlineExceeded, percentiles_ms
 
-__all__ = ["ServePolicy", "TMServer", "bucket_for", "default_buckets",
-           "route_buckets"]
+__all__ = ["ServePolicy", "TMServer", "DeadlineExceeded", "bucket_for",
+           "default_buckets", "route_buckets"]
 
 _STOP = object()        # queue sentinel: wakes the scheduler for shutdown
 
@@ -122,18 +177,29 @@ class ServePolicy:
     ``max_wait_us``: how long an open batch may wait for more arrivals;
     0 dispatches every batch as soon as the queue momentarily drains.
     ``buckets``: padded shapes to compile for (``None`` → powers of two up
-    to ``max_batch``).  ``queue_depth``: bound on queued requests —
+    to ``max_batch``).  ``queue_depth``: bound on waiting requests —
     ``submit`` awaits (backpressure) instead of growing an unbounded
-    backlog.  ``backend``: pin every bucket to one backend; ``None``
+    backlog; labeled updates get their own gate of the same depth so
+    neither plane can starve the other.  ``backend``: pin every bucket to one backend; ``None``
     routes per bucket (measured routes, then density heuristic).
 
     ``shed_backend``: name of the overload tier's backend (``None`` turns
-    shedding off).  A batch dispatched while the queue holds at least
-    ``shed_qdepth`` waiting items routes there instead of the bucket's
-    normal backend; ``shed_qdepth=0`` sheds *every* batch (a pure
-    latency tier).  ``shed_opts`` are forwarded to the tier engine's
-    constructor; a ``cascade`` tier defaults to ``exact_sums=False`` —
-    exact predictions, stage-1 class sums on early-exited rows.
+    shedding off).  A batch dispatched while the backlog holds at least
+    ``shed_qdepth`` waiting items — or whose tightest deadline is inside
+    the bucket's EWMA service time (slack exhaustion) — routes there
+    instead of the bucket's normal backend; ``shed_qdepth=0`` sheds
+    *every* batch (a pure latency tier).  ``shed_opts`` are forwarded to
+    the tier engine's constructor; a ``cascade`` tier defaults to
+    ``exact_sums=False`` — exact predictions, stage-1 class sums on
+    early-exited rows.
+
+    ``pipeline_depth``: how many dispatched batches may be in flight at
+    once (assembly of batch ``k+1`` overlaps compute of ``k``); ``1``
+    reproduces the legacy serial scheduler exactly.
+    ``admission_control``: reject a request outright when its deadline is
+    provably unmeetable — below the bucket's fastest observed service
+    time at submit, or already expired while queued at dispatch —
+    instead of serving a guaranteed miss.
     """
 
     max_batch: int = 64
@@ -144,6 +210,13 @@ class ServePolicy:
     shed_backend: str | None = None
     shed_qdepth: int = 0
     shed_opts: dict | None = None
+    pipeline_depth: int = 2
+    admission_control: bool = True
+
+    def __post_init__(self):
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {self.pipeline_depth}")
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """The sorted, deduplicated bucket shapes this policy compiles."""
@@ -191,11 +264,19 @@ def route_buckets(cfg: TMConfig, state: TMState,
 
 
 class _Request:
-    """A queued predict, pinned to the state version current at arrival."""
+    """A queued predict, pinned to the state version current at arrival.
 
-    __slots__ = ("lits", "n", "future", "t_in", "client", "version", "state")
+    ``deadline`` is the absolute monotonic completion target (``None``
+    for best-effort); ``priority`` orders tiers (lower serves first);
+    ``seq`` is the arrival sequence number — the EDF heap orders by
+    ``(priority, deadline, seq)``, so deadline-free traffic is FIFO.
+    """
 
-    def __init__(self, lits, future, client, version, state):
+    __slots__ = ("lits", "n", "future", "t_in", "client", "version",
+                 "state", "deadline", "priority", "seq")
+
+    def __init__(self, lits, future, client, version, state, *,
+                 deadline=None, priority=0, seq=0):
         self.lits = lits
         self.n = lits.shape[0]
         self.future = future
@@ -203,6 +284,14 @@ class _Request:
         self.client = client
         self.version = version
         self.state = state
+        self.deadline = deadline
+        self.priority = priority
+        self.seq = seq
+
+    def sort_key(self):
+        return (self.priority,
+                self.deadline if self.deadline is not None else float("inf"),
+                self.seq)
 
 
 class _Update:
@@ -223,17 +312,19 @@ class TMServer:
     Use as an async context manager, or call :meth:`start` / :meth:`stop`
     explicitly.  :meth:`submit` awaits queue space (backpressure), then
     awaits the request's slice of a batched ``infer``.  One scheduler
-    coroutine owns coalescing; one worker thread owns JAX compute, so the
-    event loop stays free to accept traffic mid-batch.
+    coroutine owns coalescing and assembly (stage A), a single worker
+    thread owns JAX predict compute (stage B, up to
+    ``policy.pipeline_depth`` batches in flight), and a fan-out
+    coroutine resolves futures (stage C) — see the module docstring for
+    the pipeline and the deadline/admission semantics.
 
     ``train_backend`` opts into online learning: :meth:`submit_labeled`
     feeds labeled batches through the named :mod:`repro.engine.train`
-    backend, and the served state advances through immutable, versioned
-    copies (see the module docstring for the consistency contract).
-    ``train_seed`` seeds the server's update-key chain: update ``i``
-    uses ``split(chain)[1]`` with ``chain = split(chain)[0]`` advanced
-    each update, so a replay with the same seed and update order is
-    bit-identical.
+    backend on a dedicated training thread, and the served state
+    advances through immutable, versioned copies.  ``train_seed`` seeds
+    the server's update-key chain: update ``i`` uses ``split(chain)[1]``
+    with ``chain = split(chain)[0]`` advanced each update, so a replay
+    with the same seed and update order is bit-identical.
 
     Lifecycle knobs: ``checkpoint_dir`` names where :meth:`checkpoint` /
     :meth:`restore` persist snapshots; ``checkpoint_every_updates > 0``
@@ -241,9 +332,9 @@ class TMServer:
     (``checkpoint_keep`` newest retained on disk).  ``history_size``
     bounds the in-memory ring of recent ``(version, state)`` pairs that
     :meth:`rollback` draws from.  ``probe=(literals, labels)`` with
-    ``probe_every_updates > 0`` scores the held-out probe stream on the
-    worker thread every N applied updates (drift monitoring — see
-    :meth:`stats` and docs/operations.md).
+    ``probe_every_updates > 0`` scores the held-out probe stream every N
+    applied updates (drift monitoring — see :meth:`stats` and
+    docs/operations.md).
     """
 
     def __init__(self, cfg: TMConfig, state: TMState,
@@ -259,6 +350,11 @@ class TMServer:
                  probe_window: int = 256,
                  latency_window: int = 4096):
         self.cfg = cfg
+        # one lock for every counter stats() reads: fan-out, the update
+        # path and stats() itself all take it, so a stats() snapshot is
+        # internally consistent (satellite: no more field-by-field reads
+        # racing the worker thread)
+        self._mu = threading.Lock()
         # (version, state): swapped as one tuple so concurrent readers
         # (submit on the event loop, stats) always see a matched pair —
         # _publish also appends the pair to the bounded history ring
@@ -275,11 +371,16 @@ class TMServer:
         self._train_engine = None
         self._train_key = None
         self._train_backend = train_backend
+        self._train_pool: ThreadPoolExecutor | None = None
         if train_backend is not None:
             import jax
             from repro.engine import get_train_engine
             self._train_engine = get_train_engine(train_backend, cfg)
             self._train_key = jax.random.key(train_seed)
+            # updates get their own thread: a training step overlaps
+            # predict compute (stage B) instead of serializing behind it
+            self._train_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="tm-serve-train")
         # -- lifecycle: checkpointing, rollback, drift probe ----------
         self._ckpt_dir = checkpoint_dir
         self._ckpt_every = int(checkpoint_every_updates)
@@ -306,15 +407,38 @@ class TMServer:
             maxlen=probe_window)
         self._probe_best: float | None = None
         self._n_probe_evals = 0
-        self._queue: asyncio.Queue = asyncio.Queue(
-            maxsize=self.policy.queue_depth)
+        # -- queues + pipeline state ----------------------------------
+        # the arrival queue is unbounded; the capacity semaphores are
+        # the real backpressure bound — acquired by submit (predict
+        # gate) / submit_labeled (update gate), released only when the
+        # scheduler pops the item into a dispatched batch, so each
+        # plane never exceeds queue_depth waiting items.  The gates are
+        # separate on purpose: semaphore waiters are FIFO, so a
+        # saturating predict flood sharing one gate would park every
+        # labeled update behind the whole predict backlog
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._capacity = asyncio.Semaphore(self.policy.queue_depth)
+        self._update_capacity = asyncio.Semaphore(self.policy.queue_depth)
+        self._sem = asyncio.Semaphore(self.policy.pipeline_depth)
+        self._completions: asyncio.Queue = asyncio.Queue()
+        self._pending: list[tuple] = []            # EDF heap of predicts
+        self._pending_updates: deque[_Update] = deque()
+        self._get_task: asyncio.Task | None = None
+        self._update_task: asyncio.Task | None = None
+        self._fanout_task: asyncio.Task | None = None
+        self._seq = 0
+        self._next_slot = 0
+        self._asm_buffers: list[np.ndarray | None] = \
+            [None] * self.policy.pipeline_depth
+        self._inflight = 0
+        self._inflight_versions: dict[int, int] = {}
+        self._svc = ServiceStats()        # per-bucket service-time ring
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="tm-serve-infer")
         self._task: asyncio.Task | None = None
-        self._carry: _Request | _Update | None = None
         self._closed = False
         self._stop_seen = False
-        # stats (scheduler-coroutine-owned; read-only from stats())
+        # stats (mutated under self._mu; snapshotted by stats())
         self._latencies: deque[float] = deque(maxlen=latency_window)
         self._n_requests = 0
         self._n_rows = 0
@@ -323,6 +447,11 @@ class TMServer:
         self._n_errors = 0
         self._n_updates = 0
         self._n_update_rows = 0
+        self._n_deadline_reqs = 0
+        self._n_deadline_misses = 0
+        self._n_admission_rejects = 0
+        self._n_expired_drops = 0
+        self._n_slack_shed_batches = 0
         # tier counters: shed decisions are per batch; escalation splits
         # are per row, reported by any engine whose aux carries an
         # "escalated" mask (the cascade, shed or routed)
@@ -341,8 +470,9 @@ class TMServer:
         in the bounded history ring (rollback targets; memory stays
         bounded because the ring evicts oldest-first while in-flight
         predicts keep their own pinned references alive)."""
-        self._current = (version, state)
-        self._history.append((version, state))
+        with self._mu:
+            self._current = (version, state)
+            self._history.append((version, state))
 
     @property
     def state(self) -> TMState:
@@ -364,18 +494,22 @@ class TMServer:
     # -- lifecycle ----------------------------------------------------
 
     async def start(self) -> "TMServer":
-        """Launch the scheduler coroutine (idempotent use is an error)."""
+        """Launch the fan-out + scheduler coroutines (once only)."""
         if self._task is not None:
             raise RuntimeError("server already started")
-        self._task = asyncio.get_running_loop().create_task(
+        loop = asyncio.get_running_loop()
+        self._fanout_task = loop.create_task(
+            self._fanout_loop(), name="tm-serve-fanout")
+        self._task = loop.create_task(
             self._scheduler(), name="tm-serve-scheduler")
         return self
 
     async def stop(self) -> None:
-        """Graceful shutdown: drain queued requests, take a final
-        checkpoint when periodic checkpointing is on and the state has
-        advanced past the last snapshot, then join any in-flight
-        checkpoint writers so no snapshot is torn by process exit."""
+        """Graceful shutdown: drain queued requests and in-flight
+        pipeline stages, take a final checkpoint when periodic
+        checkpointing is on and the state has advanced past the last
+        snapshot, then join any in-flight checkpoint writers so no
+        snapshot is torn by process exit."""
         if self._closed:
             return
         self._closed = True
@@ -383,6 +517,8 @@ class TMServer:
         if self._task is not None:
             await self._task
         self._pool.shutdown(wait=True)
+        if self._train_pool is not None:
+            self._train_pool.shutdown(wait=True)
         if (self._ckpt_dir is not None
                 and self._current[0] != self._last_ckpt_version):
             self.checkpoint()
@@ -486,6 +622,9 @@ class TMServer:
                 self._train_engine = get_train_engine(
                     backend, self.cfg, **extra.get("train_opts", {}))
                 self._train_backend = backend
+                if self._train_pool is None:
+                    self._train_pool = ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix="tm-serve-train")
             self._train_key = import_key_cursor(tree["cursor"],
                                                 extra["key_impl"])
         self._restored_from = step
@@ -558,11 +697,11 @@ class TMServer:
         In online-learning mode, ``train_batches`` also compiles the
         train step for those labeled-batch row counts (the update path
         compiles per batch shape, exactly like predict buckets — feed
-        fixed-size labeled batches to avoid mid-traffic compiles).
-        When a drift probe is configured, its (possibly oversized)
-        bucket compiles here too, so the first probe eval doesn't stall
-        the worker thread on XLA.  The warmup step's result is
-        discarded; the served state is untouched.
+        fixed-size labeled batches to avoid mid-traffic compiles) on the
+        training thread.  When a drift probe is configured, its
+        (possibly oversized) bucket compiles here too, so the first
+        probe eval doesn't stall the worker thread on XLA.  The warmup
+        step's result is discarded; the served state is untouched.
         """
         import jax
         loop = asyncio.get_running_loop()
@@ -594,26 +733,62 @@ class TMServer:
             labels = np.zeros((n,), np.int32)
             key = jax.random.key(0)
             await loop.run_in_executor(
-                self._pool,
+                self._train_pool,
                 lambda l=lits, y=labels: jax.block_until_ready(
                     self._train_engine.step(self._current[1], key, l, y).ta))
 
     # -- request path -------------------------------------------------
 
-    async def submit(self, literals, *, client=None) -> EngineResult:
+    async def submit(self, literals, *, client=None,
+                     deadline_us: int | None = None,
+                     priority: int = 0) -> EngineResult:
         """One request: ``(n, 2F)`` or ``(2F,)`` {0,1} literals → the
         request's own :class:`EngineResult` (batch-leading, ``n`` rows).
 
-        Awaits queue space when ``queue_depth`` requests are already
-        waiting — callers *feel* overload as latency, the server never
-        grows an unbounded backlog.
+        ``deadline_us`` is the completion SLO from now; the scheduler
+        serves tighter slack first (EDF within a priority tier) and may
+        reject (:class:`DeadlineExceeded`) when admission control
+        proves the deadline unmeetable — at submit, when the fastest
+        service time ever observed for the request's bucket already
+        exceeds it; or at dispatch, when the deadline expired while
+        the request waited in the queue.
+        ``priority`` orders tiers (lower first; deadline-free traffic at
+        equal priority stays FIFO).  Awaits queue space when
+        ``queue_depth`` requests are already waiting — callers *feel*
+        overload as latency, the server never grows an unbounded
+        backlog.
         """
         if self._closed:
             raise RuntimeError("TMServer is stopped")
         lits = self._check_literals(literals)
+        if deadline_us is not None:
+            deadline_us = int(deadline_us)
+            if deadline_us <= 0:
+                raise ValueError(f"deadline_us must be > 0, "
+                                 f"got {deadline_us}")
+            if self.policy.admission_control:
+                floor = self._svc.floor(
+                    bucket_for(lits.shape[0], self.buckets))
+                if floor is not None and floor > deadline_us * 1e-6:
+                    with self._mu:
+                        self._n_admission_rejects += 1
+                    raise DeadlineExceeded(
+                        f"deadline {deadline_us}us is below the fastest "
+                        f"observed service time {floor * 1e6:.0f}us for "
+                        f"this bucket — the request provably cannot "
+                        f"meet it")
         future = asyncio.get_running_loop().create_future()
+        await self._capacity.acquire()
+        # pin *after* backpressure resolves: the version current when
+        # the request actually enters the scheduler's queue
         version, state = self._current
-        await self._queue.put(_Request(lits, future, client, version, state))
+        self._seq += 1
+        req = _Request(
+            lits, future, client, version, state,
+            deadline=(time.monotonic() + deadline_us * 1e-6
+                      if deadline_us is not None else None),
+            priority=int(priority), seq=self._seq)
+        self._queue.put_nowait(req)
         return await future
 
     def _check_literals(self, literals) -> np.ndarray:
@@ -632,8 +807,10 @@ class TMServer:
         labels → the state version that includes this update.
 
         Requires online-learning mode (``train_backend=`` at
-        construction).  Updates share the request queue, so they apply in
-        FIFO order with predicts and feel the same backpressure; the
+        construction).  Updates apply in FIFO order among themselves and
+        have their *own* admission gate (also ``queue_depth`` deep): a
+        saturating predict flood waiting on the predict gate's FIFO
+        cannot starve the learning control plane, and vice versa.  The
         returned future resolves once the new state version is live.
         Predicts already queued keep the version they arrived under.
         """
@@ -651,63 +828,374 @@ class TMServer:
         if y.size and (y.min() < 0 or y.max() >= self.cfg.n_classes):
             raise ValueError(f"labels out of range [0, {self.cfg.n_classes})")
         future = asyncio.get_running_loop().create_future()
-        await self._queue.put(_Update(lits, y, future))
+        await self._update_capacity.acquire()
+        self._queue.put_nowait(_Update(lits, y, future))
         return await future
 
-    # -- scheduler ----------------------------------------------------
+    # -- scheduler (stage A: coalesce + assemble) ---------------------
+
+    def _ingest(self, item) -> None:
+        """Sort one arrival into the EDF heap / update FIFO."""
+        if item is _STOP:
+            self._stop_seen = True
+        elif isinstance(item, _Update):
+            self._pending_updates.append(item)
+        else:
+            heapq.heappush(self._pending, (*item.sort_key(), item))
+
+    def _drain_queue(self) -> None:
+        """Move every already-arrived item into the reorder structures."""
+        t = self._get_task
+        if t is not None and t.done():
+            self._get_task = None
+            self._ingest(t.result())
+        while True:
+            try:
+                self._ingest(self._queue.get_nowait())
+            except asyncio.QueueEmpty:
+                break
+
+    async def _next_arrival(self, timeout, extra: asyncio.Task | None = None
+                            ) -> bool:
+        """Block up to ``timeout`` for the next queue item (ingested on
+        arrival; returns True) — or until ``extra`` (the in-flight
+        update task) finishes.  The queue getter is a persistent task so
+        a timeout never cancels a get that already claimed an item."""
+        if self._get_task is None:
+            self._get_task = asyncio.ensure_future(self._queue.get())
+        waits = {self._get_task}
+        if extra is not None:
+            waits.add(extra)
+        done, _ = await asyncio.wait(waits, timeout=timeout,
+                                     return_when=asyncio.FIRST_COMPLETED)
+        if self._get_task in done:
+            item = self._get_task.result()
+            self._get_task = None
+            self._ingest(item)
+            return True
+        return False
+
+    def _qdepth(self) -> int:
+        """Waiting (undispatched) items: arrival queue + reorder heap +
+        update FIFO — the quantity the shed tier triggers on
+        (``queue_depth`` bounds the predict and update planes each,
+        through their separate admission gates)."""
+        return (self._queue.qsize() + len(self._pending)
+                + len(self._pending_updates))
+
+    def _reap_expired(self) -> None:
+        """Fail already-dead queue heads without compute.
+
+        The lazy half of admission control (same ``admission_control``
+        switch): a request whose deadline passed while it waited can
+        provably no longer be met, so it gets :class:`DeadlineExceeded`
+        in O(1) at dispatch time instead of a batch slot — under
+        overload this is what keeps compute flowing to requests that
+        can still make their SLO.  Only heads are reaped: EDF order
+        means a live head proves the rest of its priority tier is live,
+        and lower tiers get reaped when they surface."""
+        if not self.policy.admission_control:
+            return
+        now = time.monotonic()
+        while self._pending:
+            req = self._pending[0][-1]
+            if req.deadline is None or req.deadline > now:
+                return
+            heapq.heappop(self._pending)
+            self._capacity.release()
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"deadline passed {(now - req.deadline) * 1e6:.0f}us "
+                    f"ago while queued — dropped at dispatch"))
+            with self._mu:
+                self._n_expired_drops += 1
+
+    def _pop_head(self, version: int | None = None,
+                  max_rows: int | None = None) -> _Request | None:
+        """Pop the EDF head if it can join the open batch (matching
+        state version, fits the row budget); popping releases one unit
+        of backpressure capacity.  Strictly in-order: a head that cannot
+        join closes the batch even if a deeper item could."""
+        if not self._pending:
+            return None
+        req = self._pending[0][-1]
+        if version is not None and req.version != version:
+            return None
+        if max_rows is not None and req.n > max_rows:
+            return None
+        heapq.heappop(self._pending)
+        self._capacity.release()
+        return req
+
+    async def _service_updates(self) -> None:
+        """Dispatch the next pending update when the barrier allows.
+
+        Updates serialize among themselves (one in flight — the only
+        true pipeline barrier); at ``pipeline_depth=1`` the update also
+        quiesces in-flight predicts first, reproducing the legacy
+        serial interleaving exactly."""
+        if self._update_task is not None and self._update_task.done():
+            await self._update_task   # surfaces scheduler bugs, not
+            self._update_task = None  # engine errors (_run_update catches)
+        if self._update_task is None and self._pending_updates:
+            upd = self._pending_updates.popleft()
+            self._update_capacity.release()
+            if self.policy.pipeline_depth == 1:
+                await self._completions.join()
+                await self._run_update(upd)
+            else:
+                self._update_task = asyncio.get_running_loop().create_task(
+                    self._run_update(upd), name="tm-serve-update")
 
     async def _scheduler(self) -> None:
-        policy = self.policy
-        while True:
-            if self._carry is not None:
-                first, self._carry = self._carry, None
-            else:
-                if self._stop_seen and self._queue.empty():
-                    break
-                first = await self._queue.get()
-                if first is _STOP:
-                    self._stop_seen = True
+        try:
+            while True:
+                # drain BEFORE servicing updates: an update that arrived
+                # ahead of this pass must dispatch now, not after the
+                # next (possibly never-coming) arrival
+                self._drain_queue()
+                self._reap_expired()
+                await self._service_updates()
+                if self._pending:
+                    await self._coalesce_and_dispatch()
                     continue
-            if isinstance(first, _Update):
-                await self._run_update(first)
-                continue
-            batch, rows = [first], first.n
-            deadline = time.monotonic() + policy.max_wait_us * 1e-6
-            while rows < policy.max_batch:
-                timeout = deadline - time.monotonic()
+                update_running = (self._update_task is not None
+                                  and not self._update_task.done())
+                if (self._stop_seen and self._queue.empty()
+                        and not self._pending_updates
+                        and not update_running):
+                    break
+                # idle: wake on the next arrival, or on the in-flight
+                # update finishing (its successor may be waiting)
+                await self._next_arrival(
+                    None, extra=self._update_task if update_running
+                    else None)
+        finally:
+            t, self._get_task = self._get_task, None
+            if t is not None:
+                t.cancel()
                 try:
-                    if timeout <= 0:
-                        # past the wait budget: only take what's already
-                        # queued, never block the open batch further
-                        nxt = self._queue.get_nowait()
-                    else:
-                        nxt = await asyncio.wait_for(self._queue.get(),
-                                                     timeout)
-                except (asyncio.TimeoutError, asyncio.QueueEmpty):
-                    break
-                if nxt is _STOP:
-                    self._stop_seen = True
-                    break
-                if (isinstance(nxt, _Update) or nxt.version != first.version
-                        or rows + nxt.n > policy.max_batch):
-                    # an update, a different state version, or an overflow
-                    # closes this batch; the item opens the next round
-                    self._carry = nxt
-                    break
+                    item = await t
+                except (asyncio.CancelledError, Exception):
+                    pass
+                else:
+                    self._ingest(item)   # cancel raced a claimed item
+            if self._update_task is not None:
+                try:
+                    await self._update_task
+                except Exception:
+                    pass
+                self._update_task = None
+            # abnormal exit only: on a graceful stop everything below
+            # is empty — fail whatever would otherwise hang forever
+            leftovers = [entry[-1] for entry in self._pending]
+            self._pending.clear()
+            leftovers.extend(self._pending_updates)
+            self._pending_updates.clear()
+            while not self._queue.empty():
+                item = self._queue.get_nowait()
+                if item is not _STOP:
+                    leftovers.append(item)
+            for item in leftovers:
+                if not item.future.done():
+                    item.future.set_exception(
+                        RuntimeError("TMServer scheduler exited"))
+            # drain the pipeline, then retire the fan-out coroutine
+            await self._completions.join()
+            self._completions.put_nowait(_STOP)
+            if self._fanout_task is not None:
+                await self._fanout_task
+                self._fanout_task = None
+
+    async def _coalesce_and_dispatch(self) -> None:
+        """Open a batch at the EDF head and coalesce until full, closed,
+        or out of wait budget — then hand it to stage B."""
+        policy = self.policy
+        first = self._pop_head()
+        batch, rows = [first], first.n
+        deadline = time.monotonic() + policy.max_wait_us * 1e-6
+        while rows < policy.max_batch:
+            self._drain_queue()
+            nxt = self._pop_head(version=first.version,
+                                 max_rows=policy.max_batch - rows)
+            if nxt is not None:
                 batch.append(nxt)
                 rows += nxt.n
-            # shed decision happens at dispatch, against the backlog left
-            # *after* coalescing: a deep residual queue means arrivals are
-            # outpacing compute, exactly when the cheap tier should run
-            shed = (self.policy.shed_backend is not None
-                    and self._queue.qsize() >= self.policy.shed_qdepth)
-            await self._run_batch(batch, rows, shed=shed)
+                continue
+            if self._pending or self._pending_updates or self._stop_seen:
+                # the head exists but cannot join (version cut / row
+                # overflow), or an update/stop wants the floor: close
+                break
+            timeout = deadline - time.monotonic()
+            if timeout <= 0 or not await self._next_arrival(timeout):
+                break
+        await self._dispatch_batch(batch, rows)
+
+    def _assemble(self, batch: list[_Request], rows: int, bucket: int,
+                  slot: int) -> np.ndarray:
+        """Stage A assembly into the slot's reusable double buffer.
+
+        Slot ``k`` is provably idle when reused: re-acquiring the
+        pipeline semaphore ``depth`` dispatches later implies the
+        dispatch that last wrote it has completed compute and fan-out.
+        An exact-fit single request skips the copy entirely."""
+        if len(batch) == 1 and batch[0].n == bucket:
+            return batch[0].lits
+        buf = self._asm_buffers[slot]
+        if buf is None or buf.shape[0] < bucket:
+            buf = np.zeros((bucket, self.cfg.n_literals), np.int8)
+            self._asm_buffers[slot] = buf
+        off = 0
+        for req in batch:
+            buf[off:off + req.n] = req.lits
+            off += req.n
+        buf[off:bucket] = 0          # neutral padding rows
+        return buf[:bucket]
+
+    async def _dispatch_batch(self, batch: list[_Request], rows: int
+                              ) -> None:
+        """Assemble (stage A) and launch compute (stage B), bounded at
+        ``pipeline_depth`` in flight; completion metadata goes to the
+        FIFO that stage C fans out from."""
+        await self._sem.acquire()
+        slot = self._next_slot
+        self._next_slot = (slot + 1) % self.policy.pipeline_depth
+        bucket = bucket_for(rows, self.buckets)
+        lits = self._assemble(batch, rows, bucket, slot)
+        # shed decision at dispatch time: backlog depth (arrivals are
+        # outpacing compute) OR slack exhaustion (the tightest deadline
+        # in the batch is inside the bucket's expected service time)
+        slack_shed = False
+        if self.policy.shed_backend is not None:
+            deadlines = [r.deadline for r in batch if r.deadline is not None]
+            if deadlines:
+                ewma = self._svc.ewma(bucket)
+                slack_shed = (ewma is not None and
+                              min(deadlines) - time.monotonic() < ewma)
+        shed = (self.policy.shed_backend is not None
+                and (self._qdepth() >= self.policy.shed_qdepth
+                     or slack_shed))
+        fut = asyncio.get_running_loop().run_in_executor(
+            self._pool, self._compute, lits, bucket, batch[0].state, shed)
+        with self._mu:
+            self._inflight += 1
+            v = batch[0].version
+            self._inflight_versions[v] = \
+                self._inflight_versions.get(v, 0) + 1
+            if shed and slack_shed:
+                self._n_slack_shed_batches += 1
+        self._completions.put_nowait((batch, rows, bucket, shed, fut))
+        if self.policy.pipeline_depth == 1:
+            # legacy serial semantics: this batch fully retires (compute
+            # + fan-out) before the next one opens
+            await self._completions.join()
+
+    # -- stage B: device compute (worker thread) ----------------------
+
+    def _compute(self, lits: np.ndarray, bucket: int, state: TMState,
+                 shed: bool) -> EngineResult:
+        """One padded engine call, materialized to numpy (worker
+        thread).  Only the engine call is traced, so XLA compiles once
+        per (engine, bucket) no matter how request sizes combine; the
+        wall time feeds the per-bucket service ring admission control
+        and slack shedding read."""
+        t0 = time.perf_counter()
+        engine = (self.shed_engine_for(bucket, state) if shed
+                  else self.engine_for(bucket, state))
+        res = infer_padded(engine, lits, bucket)
+        out = EngineResult(
+            np.asarray(res.prediction), np.asarray(res.class_sums),
+            {k: np.asarray(v) for k, v in res.aux.items()})
+        self._svc.observe(bucket, time.perf_counter() - t0)
+        return out
+
+    # -- stage C: fan-out ---------------------------------------------
+
+    async def _fanout_loop(self) -> None:
+        """Resolve per-request futures in dispatch (FIFO) order.
+
+        A dedicated coroutine so awaiting clients never sit behind
+        stage A assembling the next batch; the worker thread is serial,
+        so FIFO completion order preserves per-client arrival order."""
+        while True:
+            item = await self._completions.get()
+            if item is _STOP:
+                self._completions.task_done()
+                return
+            batch, rows, bucket, shed, fut = item
+            try:
+                try:
+                    res = await fut
+                except Exception as exc:
+                    # a failing batch (bad routing entry, backend error)
+                    # fails *its own* requests and nothing else
+                    for req in batch:
+                        if not req.future.done():
+                            req.future.set_exception(exc)
+                    with self._mu:
+                        self._n_errors += len(batch)
+                else:
+                    self._fan_out(batch, rows, bucket, shed, res)
+            finally:
+                with self._mu:
+                    self._inflight -= 1
+                    v = batch[0].version
+                    left = self._inflight_versions.get(v, 1) - 1
+                    if left > 0:
+                        self._inflight_versions[v] = left
+                    else:
+                        self._inflight_versions.pop(v, None)
+                self._sem.release()
+                self._completions.task_done()
+
+    def _fan_out(self, batch: list[_Request], rows: int, bucket: int,
+                 shed: bool, res: EngineResult) -> None:
+        """Slice one completed batch back per request and settle
+        counters (one locked update — stats() snapshots are
+        consistent)."""
+        done = time.monotonic()
+        lats = []
+        n_dead = n_miss = 0
+        offset = 0
+        for req in batch:
+            sl = slice(offset, offset + req.n)
+            offset += req.n
+            out = EngineResult(res.prediction[sl], res.class_sums[sl],
+                               {k: v[sl] for k, v in res.aux.items()})
+            if not req.future.done():
+                req.future.set_result(out)
+            lats.append(done - req.t_in)
+            if req.deadline is not None:
+                n_dead += 1
+                if done > req.deadline:
+                    n_miss += 1
+        esc = res.aux.get("escalated")
+        with self._mu:
+            self._latencies.extend(lats)
+            self._n_requests += len(batch)
+            self._n_rows += rows
+            self._n_batches += 1
+            self._n_padded_rows += bucket
+            self._n_deadline_reqs += n_dead
+            self._n_deadline_misses += n_miss
+            if shed:
+                self._n_shed_batches += 1
+                self._n_shed_rows += rows
+            if esc is not None:         # a cascade served this batch
+                # the executor hands over the bucket-shaped result, so
+                # trim the mask to real rows — pad rows aren't traffic
+                self._n_cascade_rows += rows
+                self._n_escalated_rows += int(np.asarray(esc)[:rows].sum())
+
+    # -- online learning ----------------------------------------------
 
     async def _run_update(self, upd: _Update) -> None:
-        """Apply one labeled batch on the worker thread, then publish the
-        new ``(version, state)`` pair — predicts never see a partial
+        """Apply one labeled batch on the training thread, then publish
+        the new ``(version, state)`` pair — predicts never see a partial
         state because the swap is a single tuple assignment of an
-        immutable, fully-computed state."""
+        immutable, fully-computed state.  The key-chain cursor advances
+        on the event loop *after* the step succeeds, so a checkpoint
+        always pairs a published state with its matching cursor."""
         import jax
 
         def learn() -> tuple:
@@ -722,17 +1210,19 @@ class TMServer:
 
         try:
             chain, new_state = await asyncio.get_running_loop() \
-                .run_in_executor(self._pool, learn)
+                .run_in_executor(self._train_pool, learn)
         except Exception as exc:
             if not upd.future.done():
                 upd.future.set_exception(exc)
-            self._n_errors += 1
+            with self._mu:
+                self._n_errors += 1
             return
         self._train_key = chain
         version = self._current[0] + 1
         self._publish(version, new_state)
-        self._n_updates += 1
-        self._n_update_rows += upd.lits.shape[0]
+        with self._mu:
+            self._n_updates += 1
+            self._n_update_rows += upd.lits.shape[0]
         if not upd.future.done():
             upd.future.set_result(version)
         if (self._ckpt_dir is not None and self._ckpt_every
@@ -744,9 +1234,10 @@ class TMServer:
                 and self._n_updates % self._probe_every == 0):
             try:
                 acc = await asyncio.get_running_loop().run_in_executor(
-                    self._pool, self._probe_eval, new_state)
+                    self._train_pool, self._probe_eval, new_state)
             except Exception:
-                self._n_errors += 1
+                with self._mu:
+                    self._n_errors += 1
             else:
                 self._probe_history.append((version, acc))
                 self._n_probe_evals += 1
@@ -754,7 +1245,7 @@ class TMServer:
                     self._probe_best = acc
 
     def _probe_eval(self, state: TMState) -> float:
-        """Score the held-out probe stream under ``state`` (worker
+        """Score the held-out probe stream under ``state`` (training
         thread): accuracy through the same padded-bucket engine path
         predicts take, so probing stays off the event loop and shares
         the compiled (engine, bucket) pairs."""
@@ -764,69 +1255,30 @@ class TMServer:
         res = infer_padded(engine, lits, bucket)
         return float((np.asarray(res.prediction) == labels).mean())
 
-    async def _run_batch(self, batch: list[_Request], rows: int, *,
-                         shed: bool = False) -> None:
-        parts = [r.lits for r in batch]
-        state = batch[0].state          # one version per batch, by coalesce
-
-        def compute() -> tuple[EngineResult, int]:
-            # assemble and pad in numpy, fan out in numpy: only the
-            # engine call is traced, so XLA compiles once per (engine,
-            # bucket) no matter how request sizes combine
-            bucket = bucket_for(rows, self.buckets)
-            engine = (self.shed_engine_for(bucket, state) if shed
-                      else self.engine_for(bucket, state))
-            lits = parts[0] if len(parts) == 1 else np.concatenate(parts)
-            res = infer_padded(engine, lits, bucket)
-            return EngineResult(
-                np.asarray(res.prediction), np.asarray(res.class_sums),
-                {k: np.asarray(v) for k, v in res.aux.items()}), bucket
-
-        try:
-            res, bucket = await asyncio.get_running_loop().run_in_executor(
-                self._pool, compute)
-        except Exception as exc:
-            # a failing batch (bad routing entry, backend compile error)
-            # fails *its own* requests and nothing else: the scheduler
-            # must outlive any engine error or every later submit would
-            # hang on a dead queue
-            for req in batch:
-                if not req.future.done():
-                    req.future.set_exception(exc)
-            self._n_errors += len(batch)
-            return
-        done = time.monotonic()
-        offset = 0
-        for req in batch:
-            sl = slice(offset, offset + req.n)
-            offset += req.n
-            out = EngineResult(res.prediction[sl], res.class_sums[sl],
-                               {k: v[sl] for k, v in res.aux.items()})
-            if not req.future.done():
-                req.future.set_result(out)
-            self._latencies.append(done - req.t_in)
-        self._n_requests += len(batch)
-        self._n_rows += rows
-        self._n_batches += 1
-        self._n_padded_rows += bucket
-        if shed:
-            self._n_shed_batches += 1
-            self._n_shed_rows += rows
-        esc = res.aux.get("escalated")
-        if esc is not None:             # a cascade served this batch
-            self._n_cascade_rows += int(esc.shape[0])
-            self._n_escalated_rows += int(np.asarray(esc).sum())
-
     # -- observability ------------------------------------------------
 
     def stats(self) -> dict:
         """Serving counters: queue depth, batch fill, latency percentiles.
 
+        Every counter is read under one lock in a single snapshot, so
+        the ``tiers`` / ``deadline`` / latency blocks are mutually
+        consistent even while fan-out and the update path mutate them.
+
         ``batch_fill`` is real rows ÷ padded rows — how much of each
-        compiled bucket carried actual work.  Percentiles come from a
-        sliding window of per-request latencies (seconds → ms).  In
-        online-learning mode, ``state_version``/``updates``/
+        compiled bucket carried actual work.  Percentiles (p50/p90/p99)
+        come from a sliding window of per-request latencies (seconds →
+        ms).  In online-learning mode, ``state_version``/``updates``/
         ``update_rows`` track the learning stream.
+
+        ``pipeline`` shows the dispatch scoreboard: configured depth,
+        batches currently in flight (and per state version — predicts
+        pinned to old versions overlapping newer publishes), and whether
+        an update is in flight.  ``deadline`` tracks the SLO policy:
+        deadline-carrying requests served/missed, ``miss_rate``,
+        admission rejects, and batches shed for slack exhaustion.
+        ``buckets`` is the per-bucket service-time ring (count, EWMA,
+        min, p50/p90/p99 ms) — the *same* numbers admission control and
+        slack shedding decide on.
 
         ``tiers`` tracks the overload path: the configured shed backend
         and threshold, how many batches/rows were shed, and — whenever a
@@ -846,7 +1298,31 @@ class TMServer:
         window mean, eval count — how an operator reads regression, see
         docs/operations.md).
         """
-        p50_ms, p99_ms = percentiles_ms(self._latencies)
+        with self._mu:
+            lats = list(self._latencies)
+            snap = {
+                "requests": self._n_requests,
+                "rows": self._n_rows,
+                "batches": self._n_batches,
+                "padded": self._n_padded_rows,
+                "errors": self._n_errors,
+                "updates": self._n_updates,
+                "update_rows": self._n_update_rows,
+                "version": self._current[0],
+                "history": list(v for v, _ in self._history),
+                "inflight": self._inflight,
+                "inflight_versions": dict(self._inflight_versions),
+                "deadline_reqs": self._n_deadline_reqs,
+                "deadline_misses": self._n_deadline_misses,
+                "admission_rejects": self._n_admission_rejects,
+                "expired_drops": self._n_expired_drops,
+                "slack_shed": self._n_slack_shed_batches,
+                "shed_batches": self._n_shed_batches,
+                "shed_rows": self._n_shed_rows,
+                "cascade_rows": self._n_cascade_rows,
+                "escalated_rows": self._n_escalated_rows,
+            }
+        p50_ms, p90_ms, p99_ms = percentiles_ms(lats, (0.50, 0.90, 0.99))
         ckpt_stats = None
         if self._ckpt_dir is not None:
             ckpt_stats = {
@@ -871,34 +1347,55 @@ class TMServer:
                     window_mean=round(float(np.mean(accs)), 6),
                     at_version=self._probe_history[-1][0])
         return {
-            "requests": self._n_requests,
-            "rows": self._n_rows,
-            "batches": self._n_batches,
-            "errors": self._n_errors,
-            "qdepth": self._queue.qsize(),
-            "mean_batch_rows": self._n_rows / max(self._n_batches, 1),
-            "batch_fill": self._n_rows / max(self._n_padded_rows, 1),
+            "requests": snap["requests"],
+            "rows": snap["rows"],
+            "batches": snap["batches"],
+            "errors": snap["errors"],
+            "qdepth": self._qdepth(),
+            "mean_batch_rows": snap["rows"] / max(snap["batches"], 1),
+            "batch_fill": snap["rows"] / max(snap["padded"], 1),
             "p50_ms": p50_ms,
+            "p90_ms": p90_ms,
             "p99_ms": p99_ms,
-            "state_version": self._current[0],
-            "updates": self._n_updates,
-            "update_rows": self._n_update_rows,
-            "history": {"versions": list(self.history_versions),
+            "state_version": snap["version"],
+            "updates": snap["updates"],
+            "update_rows": snap["update_rows"],
+            "history": {"versions": snap["history"],
                         "capacity": self._history.maxlen},
             "rollbacks": self._n_rollbacks,
             "checkpoint": ckpt_stats,
             "probe": probe_stats,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
+            "pipeline": {
+                "depth": self.policy.pipeline_depth,
+                "inflight": snap["inflight"],
+                "inflight_versions": {str(k): v for k, v in
+                                      sorted(snap["inflight_versions"]
+                                             .items())},
+                "update_inflight": (self._update_task is not None
+                                    and not self._update_task.done()),
+            },
+            "deadline": {
+                "requests": snap["deadline_reqs"],
+                "misses": snap["deadline_misses"],
+                "miss_rate": round(snap["deadline_misses"]
+                                   / max(snap["deadline_reqs"], 1), 6),
+                "admission_rejects": snap["admission_rejects"],
+                "expired_drops": snap["expired_drops"],
+                "slack_shed_batches": snap["slack_shed"],
+            },
+            "buckets": {str(k): v
+                        for k, v in sorted(self._svc.snapshot().items())},
             "tiers": {
                 "shed_backend": self.policy.shed_backend,
                 "shed_qdepth": self.policy.shed_qdepth,
-                "shed_batches": self._n_shed_batches,
-                "shed_rows": self._n_shed_rows,
-                "cascade_rows": self._n_cascade_rows,
-                "escalated_rows": self._n_escalated_rows,
+                "shed_batches": snap["shed_batches"],
+                "shed_rows": snap["shed_rows"],
+                "cascade_rows": snap["cascade_rows"],
+                "escalated_rows": snap["escalated_rows"],
                 "escalation_rate": round(
-                    self._n_escalated_rows / max(self._n_cascade_rows, 1),
-                    6),
+                    snap["escalated_rows"]
+                    / max(snap["cascade_rows"], 1), 6),
             },
             "engine_cache": engine_cache_info(),
         }

@@ -42,3 +42,19 @@ def test_checkpoint_serving_example_bit_exact():
     # the killed-and-restored run matched the uninterrupted one exactly
     assert out["bit_exact"], out
     assert out["version"] == 6 and out["n_predictions"] == 6
+
+
+def test_tm_serve_launcher_deadline_flags(capsys):
+    """The serving launcher runs end to end with SLO traffic: deadline +
+    priority-mix flags, pipelined dispatch, and the deadline summary
+    line (the docs' quickstart command can't rot)."""
+    from repro.launch.tm_serve import main
+    main(["--classes", "3", "--clauses", "16", "--features", "12",
+          "--max-batch", "8", "--backend", "oracle", "--rate", "400",
+          "--duration", "0.5", "--stats-every", "0.2",
+          "--deadline-us", "500000", "--priority-mix", "0.5",
+          "--pipeline-depth", "2"])
+    out = capsys.readouterr().out
+    assert "deadline 500000us" in out
+    assert "mix 0.50" in out
+    assert "req/s" in out
