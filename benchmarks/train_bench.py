@@ -9,9 +9,21 @@ shape) cell, fed to ``scripts/check_perf.py`` against
 
     PYTHONPATH=src python -m benchmarks.train_bench --quick
     PYTHONPATH=src python -m benchmarks.train_bench --out BENCH_train.json
+    PYTHONPATH=src python -m benchmarks.train_bench --sparse --quick
 
 ``--quick`` runs the bench shape only and additionally asserts the
 acceptance bar: the ``fused`` backend ≥ 2× the ``reference`` step time.
+
+``--sparse`` switches to the clause-indexed matrix instead: a
+density × ``k_slack`` sweep of the ``sparse`` backend (``kind:
+"train_sparse"`` rows), each cell timed against the reference step on
+the *same* state so the cell carries its own ``speedup_vs_reference``.
+Density is the include fraction the state is built at — it fixes the
+ELL row width K and therefore the gather cost — and ``k_slack`` is the
+over-allocation headroom that trades rebuild frequency for wasted
+lanes.  With ``--quick`` the sweep shrinks to the 5 % cells and
+asserts the sparse acceptance bar: ≥ 1.5× over ``reference`` at 5 %
+density with the default slack.
 
 The bench shape is class-heavy (C=128): training cost in the reference
 is dominated by the three ``O(B·C·M·2F)`` dense einsums (clause eval +
@@ -36,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tm import TMConfig
+from repro.core.tm import TMConfig, TMState
 from repro.core.tm_train import train_step
 from repro.engine import available_train_backends, get_train_engine
 
@@ -52,6 +64,29 @@ FULL_GRID = ({"C": 128, "M": 64, "B": 128}, {"C": 128, "M": 64, "B": 256},
 QUICK_GRID = (BENCH_SHAPE,)
 
 MIN_FUSED_SPEEDUP = 2.0
+
+# sparse matrix: include densities × ELL over-allocation slack, all on
+# the bench shape (the sweep varies the layout, not the machine)
+SPARSE_DENSITIES = (0.05, 0.15, 0.35)
+SPARSE_K_SLACKS = (0, 8, 32)
+SPARSE_BAR_DENSITY = 0.05   # the trained-machine regime the bar is set in
+SPARSE_BAR_K_SLACK = 8      # the backend default
+MIN_SPARSE_SPEEDUP = 1.5
+
+
+def _state_at_density(cfg: TMConfig, rng: np.random.Generator,
+                      density: float) -> TMState:
+    """Random state whose include fraction is ``density``.
+
+    Included TAs draw from (N, 2N], excluded from [1, N] — realistic
+    spread on both sides of the include boundary rather than the
+    boundary-hugging values ``_random_state`` uses.
+    """
+    shape = (cfg.n_classes, cfg.n_clauses, cfg.n_literals)
+    inc = rng.random(shape) < density
+    lo = rng.integers(1, cfg.n_states + 1, shape)
+    hi = rng.integers(cfg.n_states + 1, 2 * cfg.n_states + 1, shape)
+    return TMState(ta=jnp.asarray(np.where(inc, hi, lo), dtype=jnp.int32))
 
 
 def _time_round_robin(engines: dict, state, key, lits, y, *,
@@ -111,6 +146,66 @@ def sweep(*, quick: bool = False, backends: list[str] | None = None,
     return cells
 
 
+def sparse_sweep(*, quick: bool = False, prng: str = "rbg",
+                 repeat: int = 5) -> list[dict]:
+    """Density × k_slack matrix for the ``sparse`` backend (bench shape).
+
+    One ``kind: "train_sparse"`` row per cell; the reference step is
+    re-timed per density (same state, same round-robin) so each row's
+    ``speedup_vs_reference`` compares like against like.
+    """
+    densities = ((SPARSE_BAR_DENSITY,) if quick else SPARSE_DENSITIES)
+    slacks = ((0, SPARSE_BAR_K_SLACK) if quick else SPARSE_K_SLACKS)
+    c, m, b = BENCH_SHAPE["C"], BENCH_SHAPE["M"], BENCH_SHAPE["B"]
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=F_FEATURES)
+    rng = np.random.default_rng(0)
+    lits = jnp.asarray(rng.integers(0, 2, (b, cfg.n_literals),
+                                    dtype=np.int8))
+    y = jnp.asarray(rng.integers(0, c, (b,), dtype=np.int32))
+    key = jax.random.key(0, impl=prng)
+    cells: list[dict] = []
+    for density in densities:
+        st = _state_at_density(cfg, rng, density)
+        ref = train_step(cfg, st, key, lits, y)
+        engines, builds = {}, {}
+        for ks in ("reference",) + tuple(slacks):
+            t0 = time.perf_counter()
+            engines[ks] = (get_train_engine("reference", cfg, cache=False)
+                           if ks == "reference" else
+                           get_train_engine("sparse", cfg, cache=False,
+                                            k_slack=ks))
+            builds[ks] = (time.perf_counter() - t0) * 1e3
+        times = _time_round_robin(engines, st, key, lits, y, repeat=repeat)
+        for ks in slacks:
+            eng = engines[ks]
+            got = eng.step(st, key, lits, y)
+            parity = bool((np.asarray(got.ta) == np.asarray(ref.ta)).all())
+            us = times[ks]
+            stats = eng.layout_stats() or {}
+            cells.append({
+                "kind": "train_sparse", "backend": "sparse",
+                "density": density, "k_slack": ks,
+                "C": c, "M": m, "B": b, "F": F_FEATURES, "prng": prng,
+                "build_ms": round(builds[ks], 3),
+                "step_us": round(us, 1),
+                "ref_step_us": round(times["reference"], 1),
+                "speedup_vs_reference": round(times["reference"] / us, 2),
+                "rows_per_s": round(b / (us * 1e-6), 1),
+                "k": stats.get("k"),
+                "layout_density": round(stats.get("density", 0.0), 4),
+                "delta_parity": parity,
+            })
+    return cells
+
+
+def sparse_speedup(cells: list[dict]) -> float:
+    """The bar cell's ratio: 5 % density, default slack, vs reference."""
+    bar = next(c for c in cells
+               if c["density"] == SPARSE_BAR_DENSITY
+               and c["k_slack"] == SPARSE_BAR_K_SLACK)
+    return bar["ref_step_us"] / bar["step_us"]
+
+
 def fused_speedup(cells: list[dict], shape: dict = BENCH_SHAPE) -> float:
     """``reference``/``fused`` step-time ratio on the bench shape."""
     def cell(backend):
@@ -137,6 +232,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="bench shape only + assert the ≥2x acceptance bar")
+    ap.add_argument("--sparse", action="store_true",
+                    help="run the density × k_slack sparse matrix instead "
+                         "of the backend grid (--quick: 5%% cells + "
+                         "assert the ≥1.5x sparse bar)")
     ap.add_argument("--backends", nargs="*", default=None,
                     help="subset of backends (default: all registered)")
     ap.add_argument("--prng", default="rbg",
@@ -150,8 +249,12 @@ def main() -> None:
                     help="fused-vs-reference bar that --quick must reach")
     args = ap.parse_args()
 
-    cells = sweep(quick=args.quick, backends=args.backends, prng=args.prng,
-                  repeat=args.repeat)
+    if args.sparse:
+        cells = sparse_sweep(quick=args.quick, prng=args.prng,
+                             repeat=args.repeat)
+    else:
+        cells = sweep(quick=args.quick, backends=args.backends,
+                      prng=args.prng, repeat=args.repeat)
     out = open(args.out, "w") if args.out else sys.stdout
     try:
         for cell in cells:
@@ -163,6 +266,15 @@ def main() -> None:
     if any(not c["delta_parity"] for c in cells):
         sys.exit("FAIL: a training backend diverged from the reference "
                  "deltas")
+    if args.sparse and args.quick:
+        ratio = sparse_speedup(cells)
+        print(f"sparse vs reference at {SPARSE_BAR_DENSITY:.0%} density: "
+              f"{ratio:.2f}x (target >= {MIN_SPARSE_SPEEDUP:.1f}x); delta "
+              f"parity asserted on every cell", file=sys.stderr)
+        if ratio < MIN_SPARSE_SPEEDUP:
+            sys.exit(f"FAIL: sparse speedup {ratio:.2f}x < "
+                     f"{MIN_SPARSE_SPEEDUP:.1f}x acceptance bar")
+        return
     if args.quick and args.backends is None:
         ratio = fused_speedup(cells)
         print(f"fused vs reference on the bench shape: {ratio:.2f}x "

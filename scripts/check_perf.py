@@ -30,12 +30,16 @@ Handles three row kinds in any of the given files:
   would make the key unmatchable across runs.
 - train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
   keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
-  better), baseline ``benchmarks/baseline_train.json``.
+  better), baseline ``benchmarks/baseline_train.json``.  Sparse matrix
+  rows (``kind="train_sparse"``, from ``--sparse`` — the density ×
+  k_slack sweep) live in the same baseline, keyed by (kind, density,
+  k_slack, C, M, B) with the same metric.
 
     PYTHONPATH=src python -m benchmarks.engine_bench --quick --out BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.serve_bench --quick --out BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.train_bench --quick --out BENCH_train.json
-    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json BENCH_train.json
+    PYTHONPATH=src python -m benchmarks.train_bench --sparse --quick --out BENCH_train_sparse.json
+    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json BENCH_train.json BENCH_train_sparse.json
 
 Always exits 0: timing on shared runners is advisory, never a merge
 blocker.
@@ -74,6 +78,10 @@ def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
         return key, "mean_us", "engine"
     if kind == "train":
         return ((kind, cell["backend"], cell["C"], cell["M"], cell["B"]),
+                "step_us", "train")
+    if kind == "train_sparse":
+        return ((kind, cell["density"], cell["k_slack"],
+                 cell["C"], cell["M"], cell["B"]),
                 "step_us", "train")
     return ((cell["backend"], cell["C"], cell["M"], cell["B"]),
             "infer_us", "engine")

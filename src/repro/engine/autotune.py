@@ -52,6 +52,8 @@ SEARCH_SPACE: dict[str, dict[str, tuple[int, ...]]] = {
                    "block_cm": (64, 128, 256)},
     "train:fused": {"block_b": (32, 64, 128),
                     "block_m": (32, 64, 128)},
+    "train:sparse": {"block_b": (32, 64, 128),
+                     "block_m": (32, 64, 128)},
     # early-exit cascade: exits need a stage-1 margin ≥ the remainder
     # size, so fractions below ~0.5 can never pay off — the grid starts
     # there.  The winner depends on the state's margin distribution, so

@@ -257,13 +257,30 @@ class SparseCSREngine:
     clause — ≈ 5% of L for trained machines).  Infer: literals bit-pack
     over the batch axis, each clause gathers its K rows and AND-reduces —
     clause-eval work scales with the include density instead of L.
+
+    ``ell=`` injects a prebuilt layout instead of compressing the state
+    here — the ``TMServer`` publish path passes its incrementally
+    refreshed :class:`~repro.engine.sparse.IncrementalEll` layout, so a
+    publish costs O(changed rows), not a from-scratch build.  The caller
+    guarantees the layout matches ``state``'s include mask (only shapes
+    are validated); note an ``EllLayout`` holds jax arrays, so an
+    ``ell=`` build is unhashable for the keyed engine cache — pass
+    ``cache=False`` (the server keeps its own one-slot cache).
     """
 
-    def __init__(self, cfg: TMConfig, state: TMState):
+    def __init__(self, cfg: TMConfig, state: TMState, *, ell=None):
         self.cfg = cfg
-        inc = include_mask(cfg, state).reshape(
-            cfg.n_classes * cfg.n_clauses, cfg.n_literals)
-        self.ell = ell_from_include(inc)
+        r = cfg.n_classes * cfg.n_clauses
+        if ell is None:
+            inc = include_mask(cfg, state).reshape(r, cfg.n_literals)
+            ell = ell_from_include(inc)
+        elif (ell.indices.shape[0] != r
+                or ell.n_literals != cfg.n_literals):
+            raise ValueError(
+                f"ell layout is ({ell.indices.shape[0]} rows, "
+                f"L={ell.n_literals}); cfg needs ({r}, "
+                f"L={cfg.n_literals})")
+        self.ell = ell
         self._pol = clause_polarity(cfg.n_clauses)
 
     def infer(self, literals: jax.Array) -> EngineResult:

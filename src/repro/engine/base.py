@@ -63,6 +63,7 @@ __all__ = ["EngineResult", "VoteEngine", "Registry", "KeyedEngineCache",
            "ServiceStats", "nearest_rank",
            "register_backend", "get_engine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
+           "evict_engines_for_state",
            "pad_batch", "infer_padded", "DEFAULT_BACKEND"]
 
 DEFAULT_BACKEND = "oracle"
@@ -146,7 +147,8 @@ class KeyedEngineCache:
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._data: OrderedDict[tuple, tuple] = OrderedDict()
-        self._stats = {"hits": 0, "misses": 0, "evictions": 0}
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0,
+                       "superseded": 0}
         self._lock = threading.RLock()
 
     def get(self, key):
@@ -182,6 +184,34 @@ class KeyedEngineCache:
                 self._data.popitem(last=False)
                 self._stats["evictions"] += 1
 
+    def evict_state(self, state) -> int:
+        """Drop every entry pinned to any of ``state``'s arrays → count.
+
+        The *superseded* eviction path: when a serving publish replaces
+        a state, its cached engines' layouts are stale for the logical
+        model yet stay pinned (the old arrays remain alive in the
+        history ring / in-flight predicts), so LRU pressure is the only
+        thing that would ever reclaim them.  Counted under
+        ``"superseded"``, separate from ``"evictions"`` (capacity /
+        state-death) — a growing superseded count under online learning
+        is refresh working, not cache thrash.  An in-flight predict
+        still pinned to the old state just rebuilds on its next miss;
+        correctness never depends on an entry being present.
+        """
+        targets = {id(a) for a in state}
+
+        def _held(r):
+            obj = r() if isinstance(r, weakref.ref) else r
+            return obj is not None and id(obj) in targets
+
+        with self._lock:
+            stale = [k for k, (refs, _) in self._data.items()
+                     if any(_held(r) for r in refs)]
+            for k in stale:
+                del self._data[k]
+            self._stats["superseded"] += len(stale)
+            return len(stale)
+
     def clear(self) -> None:
         """Drop every cached engine and reset all counters.
 
@@ -195,7 +225,8 @@ class KeyedEngineCache:
                 self._stats[k] = 0
 
     def info(self) -> dict:
-        """``{"size", "maxsize", "hits", "misses", "evictions"}``."""
+        """``{"size", "maxsize", "hits", "misses", "evictions",
+        "superseded"}``."""
         with self._lock:
             return {"size": len(self._data), "maxsize": self.maxsize,
                     **self._stats}
@@ -324,10 +355,20 @@ def clear_engine_cache() -> None:
 
 
 def engine_cache_info() -> dict:
-    """``{"size", "maxsize", "hits", "misses", "evictions"}`` of the
-    engine cache (surfaced as the ``engine_cache`` block of
-    ``TMServer.stats()``)."""
+    """``{"size", "maxsize", "hits", "misses", "evictions",
+    "superseded"}`` of the engine cache (surfaced as the
+    ``engine_cache`` block of ``TMServer.stats()``)."""
     return _ENGINE_CACHE.info()
+
+
+def evict_engines_for_state(state: TMState) -> int:
+    """Evict every cached engine built on ``state`` → count evicted.
+
+    Called by ``TMServer._publish`` with the superseded state so a
+    refreshed logical model does not leak its old layouts until LRU
+    pressure (see :meth:`KeyedEngineCache.evict_state`).
+    """
+    return _ENGINE_CACHE.evict_state(state)
 
 
 class DonatingEngine:

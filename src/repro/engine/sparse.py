@@ -5,24 +5,30 @@ Trained Tsetlin Machines include only ~5% of literals per clause (the
 dense backends do O(C·M·L) clause-eval work per sample regardless.  Gorji
 et al.'s clause-indexing result (arXiv:2004.03188) shows that iterating
 only the *included* literal indices is the biggest single inference lever
-for TMs.  This module is that idea in JAX:
+for TMs.  This module owns the **layout**; the gather/AND compute bodies
+live in :mod:`repro.kernels.ell_gather`:
 
 - :func:`ell_from_include` compresses an include mask into a padded
   CSR-style layout (ELLPACK): one ``(C·M, K)`` int32 index matrix where
-  ``K = max_r nnz(r)`` and padding slots point at a sentinel literal that
-  is constant 1 — a no-op for the clause conjunction.
-- :func:`sparse_clause_words` evaluates all clauses from that layout with
-  a *batch-bit-packed gather*: literals transpose and pack over the batch
-  axis into uint32 words (32 samples per word), each clause gathers only
-  its K index rows, and an AND-reduction over K yields the clause output
-  bits for 32 samples at once.  Work is O(C·M·K·B/32) word-ops versus the
-  dense O(C·M·L·B) — at 5% density and K≈L/20 this is ~20× less clause
-  work, and bit-packing amortizes it across the batch.
+  ``K ≥ max_r nnz(r)`` and padding slots point at a sentinel literal that
+  is constant 1 — a no-op for the clause conjunction.  The build is
+  fully vectorized (argsort-over-mask), so a fleet-scale ``C·M`` rebuild
+  costs numpy kernels, not a Python per-row loop.
+- :func:`ell_apply_deltas` patches only the index rows whose include
+  bits flipped — the delta-driven refresh an online-learning loop needs,
+  O(changed rows) instead of O(R).
+- :class:`IncrementalEll` wraps both into a maintenance policy: patch on
+  small drift, full rebuild only when a row overflows the padded width K
+  or cumulative drift crosses ``rebuild_threshold`` (re-tightening K).
+  The ``sparse`` TrainEngine and the ``TMServer`` publish path both keep
+  one of these per logical model, so long-running online learners never
+  pay a from-scratch rebuild per step/publish.
 
 Bit-exactness: a clause fires iff every included literal is 1 (empty
 clauses — all-padding rows — fire, matching the oracle's ``viol == 0``
 convention), so the gathered-AND is exactly the oracle conjunction, not
-an approximation.
+an approximation; and a patched layout is *identical* to a from-scratch
+build at the same K (property-tested in ``tests/test_sparse_train.py``).
 """
 
 from __future__ import annotations
@@ -33,10 +39,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.popcount import pack_bits, unpack_bits
+from repro.kernels.ell_gather import ell_clause_words
+from repro.core.popcount import unpack_bits
 
-__all__ = ["EllLayout", "ell_from_include", "sparse_clause_words",
-           "sparse_clause_outputs"]
+__all__ = ["EllLayout", "ell_from_include", "ell_apply_deltas",
+           "IncrementalEll", "DEFAULT_K_SLACK", "DEFAULT_REBUILD_THRESHOLD",
+           "sparse_clause_words", "sparse_clause_outputs"]
+
+# shared refresh-policy defaults (the `sparse` TrainEngine and the
+# TMServer publish path both construct IncrementalEll with these)
+DEFAULT_K_SLACK = 8
+DEFAULT_REBUILD_THRESHOLD = 0.25
 
 
 class EllLayout(NamedTuple):
@@ -63,51 +76,180 @@ class EllLayout(NamedTuple):
         return float(np.asarray(self.nnz).mean()) / self.n_literals
 
 
-def ell_from_include(include: jax.Array | np.ndarray) -> EllLayout:
+def _ell_rows(inc: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """(R', L) bool include rows → ((R', k) int32 padded indices, nnz).
+
+    The vectorized argsort-over-mask idiom: ``argsort(~inc)`` (stable)
+    lists each row's included columns first in ascending order — exactly
+    the ``np.nonzero`` order of the per-row loop it replaces — and slots
+    past ``nnz`` are overwritten with the sentinel ``L``.
+    """
+    r, l = inc.shape
+    nnz = inc.sum(axis=1).astype(np.int32)
+    idx = np.full((r, k), l, dtype=np.int32)
+    kk = min(k, l)
+    if r and kk:
+        order = np.argsort(~inc, axis=1, kind="stable")[:, :kk]
+        valid = np.arange(kk)[None, :] < nnz[:, None]
+        idx[:, :kk] = np.where(valid, order, l)
+    return idx, nnz
+
+
+def ell_from_include(include: jax.Array | np.ndarray, *,
+                     k: int | None = None) -> EllLayout:
     """Compress a ``(R, L)`` {0,1} include mask into an :class:`EllLayout`.
 
-    Host-side (numpy) build-time work — the layout is precompiled once per
-    (cfg, state) and reused across every ``infer`` call.
+    Host-side (numpy) build-time work, vectorized over all R rows at
+    once.  ``k`` overrides the padded row width (must be ≥ the max
+    per-row include count; defaults to exactly that max) — incremental
+    consumers pass a slack-padded K so small density drift patches in
+    place instead of changing the compiled shape.
     """
     inc = np.asarray(include).astype(bool)
     r, l = inc.shape
-    nnz = inc.sum(axis=1).astype(np.int32)
-    k = int(nnz.max()) if r else 0
-    idx = np.full((r, k), l, dtype=np.int32)
-    for row in range(r):
-        cols = np.nonzero(inc[row])[0]
-        idx[row, : cols.size] = cols
+    k_min = int(inc.sum(axis=1).max()) if r else 0
+    if k is None:
+        k = k_min
+    elif k < k_min:
+        raise ValueError(f"k={k} is below the max per-row include count "
+                         f"{k_min}")
+    idx, nnz = _ell_rows(inc, k)
     return EllLayout(indices=jnp.asarray(idx), nnz=jnp.asarray(nnz),
                      n_literals=l)
 
 
-@jax.jit
+def ell_apply_deltas(indices: np.ndarray, nnz: np.ndarray,
+                     include: np.ndarray, rows: np.ndarray) -> bool:
+    """Patch the ELL index matrix in place for the rows whose include
+    bits flipped → ``True``, or ``False`` (nothing written) when a
+    patched row would overflow the padded width K.
+
+    ``indices``/``nnz`` are the *host* layout arrays; ``include`` is the
+    new ``(R, L)`` bool mask; ``rows`` the changed row ids.  Work is
+    O(|rows|·L) — the delta-driven refresh path — and the patched matrix
+    is bitwise identical to a from-scratch :func:`ell_from_include` at
+    the same K (ascending index order, sentinel padding).
+    """
+    k = indices.shape[1]
+    sub = np.ascontiguousarray(include[rows])
+    if sub.size and int(sub.sum(axis=1).max()) > k:
+        return False
+    idx, nn = _ell_rows(sub, k)
+    indices[rows] = idx
+    nnz[rows] = nn
+    return True
+
+
+class IncrementalEll:
+    """Delta-driven ELL maintenance for one logical (drifting) model.
+
+    Holds the host-side include mirror + index matrix and decides, per
+    :meth:`refresh`, between the O(changed rows) patch
+    (:func:`ell_apply_deltas`) and a full vectorized rebuild.  A rebuild
+    happens only when (a) a changed row overflows the padded width K,
+    or (b) cumulative drift since the last rebuild exceeds
+    ``rebuild_threshold`` (fraction of rows) — the point at which
+    re-tightening K is worth the O(R) pass.  Rebuilds pad K by
+    ``k_slack`` extra slots (rounded up to a multiple of 8 to bound the
+    number of distinct compiled gather shapes), so typical online
+    drift patches in place for many steps.
+
+    Not thread-safe: callers (the ``sparse`` TrainEngine's single
+    training thread, the ``TMServer`` publish path) serialize refreshes.
+    """
+
+    def __init__(self, include: np.ndarray | jax.Array, *,
+                 k_slack: int = DEFAULT_K_SLACK,
+                 rebuild_threshold: float = DEFAULT_REBUILD_THRESHOLD):
+        if k_slack < 0:
+            raise ValueError(f"k_slack must be >= 0, got {k_slack}")
+        if not 0.0 <= rebuild_threshold <= 1.0:
+            raise ValueError(f"rebuild_threshold must be in [0, 1], "
+                             f"got {rebuild_threshold}")
+        self.k_slack = int(k_slack)
+        self.rebuild_threshold = float(rebuild_threshold)
+        self.rebuilds = 0           # full builds (the initial one counts)
+        self.patches = 0            # delta-driven refreshes applied
+        self.rows_patched = 0
+        self._rebuild(np.asarray(include).astype(bool))
+
+    def _alloc_k(self, inc: np.ndarray) -> int:
+        r, l = inc.shape
+        if l == 0:
+            return 0
+        k_min = int(inc.sum(axis=1).max()) if r else 0
+        want = max(k_min + self.k_slack, 1)
+        return min(l, -(-want // 8) * 8)
+
+    def _rebuild(self, inc: np.ndarray) -> None:
+        self._inc = inc.copy()
+        self._idx, self._nnz = _ell_rows(inc, self._alloc_k(inc))
+        self._since = 0             # rows patched since this rebuild
+        self.rebuilds += 1
+        self._emit()
+
+    def _emit(self) -> None:
+        self._layout = EllLayout(indices=jnp.asarray(self._idx),
+                                 nnz=jnp.asarray(self._nnz),
+                                 n_literals=self._inc.shape[1])
+
+    @property
+    def layout(self) -> EllLayout:
+        """The current device-side layout (no refresh)."""
+        return self._layout
+
+    def refresh(self, include: np.ndarray | jax.Array) -> EllLayout:
+        """Bring the layout up to date with ``include`` → the layout.
+
+        No-ops (returns the cached layout) when nothing flipped; patches
+        the flipped rows in place when drift is small; falls back to a
+        full rebuild on K overflow, threshold drift, or a shape change.
+        The returned layout always equals a from-scratch
+        :func:`ell_from_include` of ``include`` at the same K.
+        """
+        inc = np.asarray(include).astype(bool)
+        if inc.shape != self._inc.shape:
+            self._rebuild(inc)
+            return self._layout
+        rows = np.nonzero((inc != self._inc).any(axis=1))[0]
+        if rows.size == 0:
+            return self._layout
+        self._since += int(rows.size)
+        if (self._since > self.rebuild_threshold * self._inc.shape[0]
+                or not ell_apply_deltas(self._idx, self._nnz, inc, rows)):
+            self._rebuild(inc)
+            return self._layout
+        self._inc[rows] = inc[rows]
+        self.patches += 1
+        self.rows_patched += int(rows.size)
+        self._emit()
+        return self._layout
+
+    def stats(self) -> dict:
+        """``{"rebuilds", "patches", "rows_patched", "k", "rows",
+        "density"}`` — the maintenance counters ``TMServer.stats()`` and
+        the train bench surface."""
+        return {"rebuilds": self.rebuilds, "patches": self.patches,
+                "rows_patched": self.rows_patched,
+                "k": int(self._idx.shape[1]),
+                "rows": int(self._idx.shape[0]),
+                "density": self._layout.density}
+
+
 def sparse_clause_words(indices: jax.Array, literals: jax.Array
                         ) -> jax.Array:
     """ELL clause eval, batch-bit-packed: → ``(R, ceil(B/32))`` uint32.
 
-    Bit ``b`` of word ``w`` of row ``r`` is clause ``r``'s output on
-    sample ``32·w + b``.  Padded batch lanes (B not a multiple of 32) come
-    back 0 and must be ignored by the caller.
+    Thin alias of :func:`repro.kernels.ell_gather.ell_clause_words`
+    (the body moved to ``kernels`` with the ELL-fed training path); see
+    there for the word semantics.
     """
-    words = pack_bits(literals.T)                        # (L, Wb) uint32
-    sentinel = jnp.full((1, words.shape[1]), 0xFFFFFFFF, jnp.uint32)
-    ext = jnp.concatenate([words, sentinel], axis=0)     # (L+1, Wb)
-    full = jnp.full((indices.shape[0], ext.shape[1]), 0xFFFFFFFF,
-                    jnp.uint32)
-    if indices.shape[1] == 0:       # every clause empty: all fire
-        return full
-    gathered = ext[indices]                              # (R, K, Wb)
-
-    def _and_step(k, acc):
-        return acc & gathered[:, k, :]
-
-    return jax.lax.fori_loop(0, indices.shape[1], _and_step, full)
+    return ell_clause_words(indices, literals)
 
 
 @jax.jit
 def sparse_clause_outputs(indices: jax.Array, literals: jax.Array
                           ) -> jax.Array:
     """ELL clause eval → ``(B, R)`` int8 clause outputs (unpacked)."""
-    cw = sparse_clause_words(indices, literals)
+    cw = ell_clause_words(indices, literals)
     return unpack_bits(cw, literals.shape[0]).T          # (B, R)

@@ -38,11 +38,27 @@ is purely a performance decision, exactly like inference.
                         clause eval + Type I/II delta generation + the
                         per-class scatter, so no per-sample delta tensor
                         ever materializes in HBM.
+``sparse``              clause-indexed: class sums come from the ELL
+                        gather path (:mod:`repro.kernels.ell_gather`) on
+                        an incrementally-refreshed layout
+                        (:class:`repro.engine.sparse.IncrementalEll`),
+                        then the fused delta kernel applies feedback —
+                        O(R·K) clause eval instead of O(R·L) at trained
+                        include densities.
 ======================  ====================================================
 
-``fused`` takes ``block_b``/``block_m`` tile opts; when not given
-explicitly, :func:`get_train_engine` consults the autotune cache (key
-``train:fused|C|M|L|device``) before falling back to the defaults.
+``fused`` and ``sparse`` take ``block_b``/``block_m`` tile opts; when not
+given explicitly, :func:`get_train_engine` consults the autotune cache
+(key ``train:<name>|C|M|L|device``) before falling back to the defaults.
+
+The one exception to "no state-derived layout" above is ``sparse``: its
+ELL index matrix *is* state-derived, so the engine carries an
+:class:`~repro.engine.sparse.IncrementalEll` that it refreshes from the
+include deltas of each step's input state — O(changed rows), not a
+rebuild — before launching the jitted step.  That host-side refresh
+needs a concrete state; under a trace (``train_epoch``'s ``lax.scan``)
+the engine falls back to the bit-identical ``packed`` step, exactly like
+the cascade engine's tracer fallback.
 """
 
 from __future__ import annotations
@@ -52,11 +68,13 @@ from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.popcount import pack_bits
 from repro.core.tm import TMConfig, TMState, clause_polarity
 from repro.core.tm_train import feedback_masks, feedback_update, train_step
 from repro.kernels.clause_eval import make_vote_matrix
+from repro.kernels.ell_gather import ell_clause_votes
 from repro.kernels.ops import on_tpu
 from repro.kernels.swar_fused import swar_fused_votes_pallas
 from repro.kernels.train_fused import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_M,
@@ -64,12 +82,15 @@ from repro.kernels.train_fused import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_M,
 
 from .backends import swar_clauses_votes
 from .base import KeyedEngineCache, Registry, _cache_key
+from .sparse import (DEFAULT_K_SLACK, DEFAULT_REBUILD_THRESHOLD,
+                     IncrementalEll)
 
 __all__ = ["TrainEngine", "register_train_backend", "get_train_engine",
            "available_train_backends", "clear_train_engine_cache",
            "train_engine_cache_info", "DEFAULT_TRAIN_BACKEND",
            "ReferenceTrainEngine", "PackedTrainEngine", "FusedTrainEngine",
-           "export_key_cursor", "import_key_cursor", "train_engine_opts"]
+           "SparseTrainEngine", "export_key_cursor", "import_key_cursor",
+           "train_engine_opts"]
 
 DEFAULT_TRAIN_BACKEND = "reference"
 TRAIN_ENGINE_CACHE_SIZE = 8
@@ -197,23 +218,19 @@ def _packed_step(cfg, state, key, x, y, pos_mask, neg_mask, *, boost_tpf):
                            boost_tpf=boost_tpf)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "boost_tpf", "block_b",
-                                             "block_m", "interpret"))
-def _fused_step(cfg, state, key, x, y, vm, pos_mask, neg_mask, *, boost_tpf,
-                block_b, block_m, interpret):
+def _deltas_from_votes(cfg, state, key, x, y, votes, *, boost_tpf,
+                       block_b, block_m, interpret):
+    """Shared tail of the fused/sparse steps: feedback masks → raw
+    uniform words → fused delta kernel → clipped new state.
+
+    Every input bit downstream of ``votes`` is backend-independent, so
+    any two backends that produce bit-identical ``votes`` and share this
+    tail return bitwise-identical states for the same key — that is the
+    whole delta-exactness argument for ``sparse`` vs ``fused``.
+    """
     b = x.shape[0]
     c, m = cfg.n_classes, cfg.n_clauses
     inc8 = (state.ta > cfg.n_states).astype(jnp.int8)            # (C, M, L)
-    if interpret:
-        # CPU: SWAR word votes as straight-line XLA (the vote kernel's
-        # interpreter overhead outweighs its fusion win off-TPU)
-        _, votes = _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask)
-    else:
-        inc_words = pack_bits(inc8.reshape(c * m, cfg.n_literals))
-        not_words = pack_bits((1 - x).astype(jnp.int8))
-        votes = swar_fused_votes_pallas(not_words, inc_words, vm,
-                                        interpret=False)         # (B, C)
-
     y_neg, fb_t, fb_n, k_i1, k_i2 = feedback_masks(cfg, key, votes, y)
     # the raw words jax.random.uniform would float-convert — the kernel
     # compares them against exact integer thresholds instead
@@ -235,6 +252,40 @@ def _fused_step(cfg, state, key, x, y, vm, pos_mask, neg_mask, *, boost_tpf,
                        interpret=interpret)
     ta = jnp.clip(state.ta + upd, 1, 2 * cfg.n_states)
     return TMState(ta=ta)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "boost_tpf", "block_b",
+                                             "block_m", "interpret"))
+def _fused_step(cfg, state, key, x, y, vm, pos_mask, neg_mask, *, boost_tpf,
+                block_b, block_m, interpret):
+    c, m = cfg.n_classes, cfg.n_clauses
+    if interpret:
+        # CPU: SWAR word votes as straight-line XLA (the vote kernel's
+        # interpreter overhead outweighs its fusion win off-TPU)
+        _, votes = _packed_clauses_votes(cfg, state, x, pos_mask, neg_mask)
+    else:
+        inc8 = (state.ta > cfg.n_states).astype(jnp.int8)        # (C, M, L)
+        inc_words = pack_bits(inc8.reshape(c * m, cfg.n_literals))
+        not_words = pack_bits((1 - x).astype(jnp.int8))
+        votes = swar_fused_votes_pallas(not_words, inc_words, vm,
+                                        interpret=False)         # (B, C)
+    return _deltas_from_votes(cfg, state, key, x, y, votes,
+                              boost_tpf=boost_tpf, block_b=block_b,
+                              block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "boost_tpf", "block_b",
+                                             "block_m", "interpret"))
+def _sparse_step(cfg, state, key, x, y, indices, *, boost_tpf, block_b,
+                 block_m, interpret):
+    """Clause-indexed step: votes from the ELL gather over ``indices``
+    (which the caller guarantees matches ``state``'s include mask), then
+    the shared fused-delta tail."""
+    c, m = cfg.n_classes, cfg.n_clauses
+    _, votes = ell_clause_votes(indices, clause_polarity(m), x, c=c, m=m)
+    return _deltas_from_votes(cfg, state, key, x, y, votes,
+                              boost_tpf=boost_tpf, block_b=block_b,
+                              block_m=block_m, interpret=interpret)
 
 
 @register_train_backend("reference")
@@ -331,4 +382,89 @@ class FusedTrainEngine:
         """Constructor opts to persist in a checkpoint — including the
         resolved autotune tile picks (see :func:`train_engine_opts`)."""
         return {"boost_tpf": self.boost_tpf,
+                "block_b": self._blocks[0], "block_m": self._blocks[1]}
+
+
+@register_train_backend("sparse")
+class SparseTrainEngine:
+    """Clause-indexed training: ELL-gathered class sums, fused deltas.
+
+    Class sums come from the batch-bit-packed gather over the ELL index
+    matrix (:func:`repro.kernels.ell_gather.ell_clause_votes`) — O(R·K)
+    per 32-sample word instead of the dense O(R·L) — and the shared
+    fused-delta tail (:func:`_deltas_from_votes`) applies feedback, so
+    the backend is delta-exact vs ``reference``/``packed``/``fused`` for
+    the same key.  The index matrix is state-derived, so the engine
+    carries an :class:`~repro.engine.sparse.IncrementalEll` and refreshes
+    it from each step's input state by include deltas: O(changed rows)
+    host work per step (≤ 2·M rows change per update — only the target
+    and negative classes get feedback), with a full vectorized rebuild
+    only on K overflow or ``rebuild_threshold`` cumulative drift.
+
+    Wins over ``fused`` when include density is low enough that clause
+    eval dominates the step (small B, large L); loses when the fused
+    Pallas vote kernel is already memory-bound or the state is dense —
+    see docs/training.md for the measured crossover.  Under a trace
+    (``train_epoch``'s ``lax.scan``) the host-side refresh is impossible,
+    so :meth:`step` falls back to the bit-identical packed step.
+
+    ``block_b``/``block_m`` tile the delta kernel (autotune key
+    ``train:sparse``); ``k_slack``/``rebuild_threshold`` tune the layout
+    refresh policy.
+    """
+
+    def __init__(self, cfg: TMConfig, *, boost_tpf: bool = True,
+                 k_slack: int = DEFAULT_K_SLACK,
+                 rebuild_threshold: float = DEFAULT_REBUILD_THRESHOLD,
+                 block_b: int = DEFAULT_BLOCK_B,
+                 block_m: int = DEFAULT_BLOCK_M):
+        self.cfg = cfg
+        self.boost_tpf = boost_tpf
+        self.k_slack = int(k_slack)
+        self.rebuild_threshold = float(rebuild_threshold)
+        self._blocks = (block_b, block_m)
+        self._ell: IncrementalEll | None = None
+        pol = clause_polarity(cfg.n_clauses)
+        self._pos_mask = pack_bits((pol > 0).astype(jnp.int8))   # (Wm,)
+        self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
+
+    def _refresh(self, state: TMState) -> jax.Array:
+        """Sync the incremental layout to ``state`` → the index matrix."""
+        cfg = self.cfg
+        inc = (np.asarray(state.ta) > cfg.n_states).reshape(
+            cfg.n_classes * cfg.n_clauses, cfg.n_literals)
+        if self._ell is None:
+            self._ell = IncrementalEll(
+                inc, k_slack=self.k_slack,
+                rebuild_threshold=self.rebuild_threshold)
+        else:
+            self._ell.refresh(inc)
+        return self._ell.layout.indices
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One clause-indexed update (see :class:`TrainEngine`)."""
+        if isinstance(state.ta, jax.core.Tracer):
+            # under scan/jit the host-side layout refresh is impossible;
+            # the packed step is bit-identical (same PRNG contract)
+            return _packed_step(self.cfg, state, key, x_literals, y,
+                                self._pos_mask, self._neg_mask,
+                                boost_tpf=self.boost_tpf)
+        indices = self._refresh(state)
+        return _sparse_step(self.cfg, state, key, x_literals, y, indices,
+                            boost_tpf=self.boost_tpf,
+                            block_b=self._blocks[0],
+                            block_m=self._blocks[1],
+                            interpret=not on_tpu())
+
+    def layout_stats(self) -> dict | None:
+        """Refresh counters of the engine's :class:`IncrementalEll`
+        (``None`` before the first concrete step)."""
+        return None if self._ell is None else self._ell.stats()
+
+    def lifecycle_opts(self) -> dict:
+        """Constructor opts to persist in a checkpoint — including the
+        resolved autotune tile picks (see :func:`train_engine_opts`)."""
+        return {"boost_tpf": self.boost_tpf, "k_slack": self.k_slack,
+                "rebuild_threshold": self.rebuild_threshold,
                 "block_b": self._blocks[0], "block_m": self._blocks[1]}

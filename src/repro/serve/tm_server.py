@@ -17,6 +17,14 @@ throughput here comes from decoupling arrival from evaluation:
   ``benchmarks/serve_bench.py --update-routing``, or the include-density
   heuristic from the README.  Engines come from ``get_engine``, so
   buckets sharing a backend share one cached engine (and tuned tiles).
+  Heuristic routes *re-resolve on every state publish*: online learning
+  drifts include density, and a route picked from the initial state
+  would silently go stale (the pre-fix bug) — each publish also
+  refreshes the server's incremental ELL layout by include deltas
+  (O(changed rows), no from-scratch CSR rebuild), prebuilds the
+  ``sparse_csr`` engine for the newest state from it, and evicts the
+  superseded state's engines from the keyed cache.  Explicit
+  ``routing=`` tables and ``policy.backend`` stay pinned.
 
 **Pipelined dispatch** (``pipeline_depth``, default 2) — the hot path is
 a three-stage pipeline instead of one serial loop:
@@ -135,8 +143,10 @@ import numpy as np
 
 from repro.core.tm import TMConfig, TMState, include_mask
 from repro.engine import (EngineResult, ServiceStats, available_backends,
-                          engine_cache_info, get_engine, infer_padded)
+                          engine_cache_info, evict_engines_for_state,
+                          get_engine, infer_padded)
 from repro.engine import autotune
+from repro.engine.sparse import IncrementalEll
 
 from .loadgen import DeadlineExceeded, percentiles_ms
 
@@ -239,7 +249,8 @@ class ServePolicy:
 
 def route_buckets(cfg: TMConfig, state: TMState,
                   buckets: tuple[int, ...], *,
-                  backend: str | None = None) -> dict[int, str]:
+                  backend: str | None = None,
+                  density: float | None = None) -> dict[int, str]:
     """bucket size → backend name.
 
     Priority per bucket: explicit ``backend`` > a measured route in the
@@ -249,12 +260,18 @@ def route_buckets(cfg: TMConfig, state: TMState,
     backend that is no longer registered (stale cache from an older
     version) falls back to the heuristic, mirroring the stale-opts
     guard in ``autotune.lookup``.
+
+    ``density`` short-circuits the include-mask reduction when the
+    caller already knows the state's include density (the server's
+    publish path computes it once for the layout refresh and the route
+    re-resolution together).
     """
     if backend is not None:
         return {b: backend for b in buckets}
     from repro.engine import available_backends
     registered = set(available_backends())
-    density = float(np.asarray(include_mask(cfg, state)).mean())
+    if density is None:
+        density = float(np.asarray(include_mask(cfg, state)).mean())
     fallback = "sparse_csr" if density <= 0.10 else "swar_packed"
     routes = {}
     for b in buckets:
@@ -360,14 +377,26 @@ class TMServer:
         # _publish also appends the pair to the bounded history ring
         self._history: deque[tuple[int, TMState]] = deque(
             maxlen=max(1, int(history_size)))
-        self._publish(0, state)
         self.policy = policy or ServePolicy()
         self.buckets = self.policy.resolved_buckets()
-        # routing reflects the *initial* state's include density; online
-        # updates do not re-route (measured/explicit routes still win)
+        # routing re-resolves on every state publish, so density-heuristic
+        # routes track include drift under online learning instead of
+        # reflecting the initial state forever; an explicit routing= table
+        # or policy.backend pins routes for the server's lifetime
+        self._routing_pinned = (routing is not None
+                                or self.policy.backend is not None)
         self.routing = dict(routing) if routing is not None else \
             route_buckets(cfg, state, self.buckets,
                           backend=self.policy.backend)
+        self._n_routing_updates = 0
+        # publish-path sparse serving maintenance: an IncrementalEll
+        # mirror of the served state's include mask plus a one-slot
+        # (state, engine) pair prebuilt for the newest state (EllLayout
+        # holds jax arrays, so it can't key the global engine cache);
+        # swapped as one tuple so lock-free readers see a matched pair
+        self._serve_ell: IncrementalEll | None = None
+        self._sparse_serving: tuple[TMState, object] | None = None
+        self._publish(0, state)
         self._train_engine = None
         self._train_key = None
         self._train_backend = train_backend
@@ -469,10 +498,60 @@ class TMServer:
         """Swap in a ``(version, state)`` pair atomically and remember it
         in the bounded history ring (rollback targets; memory stays
         bounded because the ring evicts oldest-first while in-flight
-        predicts keep their own pinned references alive)."""
+        predicts keep their own pinned references alive).  Every publish
+        then re-resolves serving against the new state
+        (:meth:`_refresh_serving`) — routes, sparse layout, and the
+        superseded state's cached engines."""
         with self._mu:
+            prev = getattr(self, "_current", None)
             self._current = (version, state)
             self._history.append((version, state))
+        self._refresh_serving(
+            state, superseded=prev[1] if prev is not None else None)
+
+    def _refresh_serving(self, state: TMState, *,
+                         superseded: TMState | None = None) -> None:
+        """Publish-path serving maintenance — the stale-routing fix.
+
+        Runs on the event-loop thread after each ``(version, state)``
+        swap:
+
+        1. re-resolves density-heuristic routes against the *new*
+           state's include density (unless routing is pinned by an
+           explicit table or ``policy.backend``), so a model that
+           drifts across the 0.10 boundary actually flips between
+           ``swar_packed`` and ``sparse_csr``;
+        2. refreshes the server's :class:`IncrementalEll` mirror by
+           include deltas and prebuilds the ``sparse_csr`` engine for
+           the newest state from it — O(changed rows) per publish
+           instead of a from-scratch CSR rebuild;
+        3. evicts the superseded state's engines from the keyed cache
+           (they are stale *for this logical model* and would otherwise
+           leak until LRU pressure; in-flight predicts still pinned to
+           the old version just rebuild on a cache miss).
+        """
+        inc = np.asarray(
+            include_mask(self.cfg, state), dtype=bool).reshape(
+            self.cfg.n_classes * self.cfg.n_clauses, self.cfg.n_literals)
+        if not self._routing_pinned:
+            new_routes = route_buckets(self.cfg, state, self.buckets,
+                                       density=float(inc.mean()))
+            if new_routes != self.routing:
+                self.routing = new_routes
+                with self._mu:
+                    self._n_routing_updates += 1
+        if "sparse_csr" in self.routing.values():
+            if self._serve_ell is None:
+                self._serve_ell = IncrementalEll(inc)
+            else:
+                self._serve_ell.refresh(inc)
+            engine = get_engine("sparse_csr", self.cfg, state, cache=False,
+                                ell=self._serve_ell.layout)
+            self._sparse_serving = (state, engine)
+        else:
+            self._sparse_serving = None
+        if superseded is not None and superseded is not state:
+            evict_engines_for_state(superseded)
 
     @property
     def state(self) -> TMState:
@@ -671,12 +750,23 @@ class TMServer:
         batch's arrival-time state); default is the newest.  Engines come
         from ``get_engine``'s keyed LRU, so each live state version keeps
         its own precompiled layout and retired versions self-evict when
-        their arrays are garbage-collected.
+        their arrays are garbage-collected — except ``sparse_csr`` for
+        the newest state, which is served from the one-slot engine the
+        publish path prebuilt from the incrementally refreshed layout
+        (an ``EllLayout`` can't key the LRU).
         """
+        st = self.state if state is None else state
         backend = self.routing.get(bucket) or \
             self.routing.get(self.buckets[-1], "oracle")
-        return get_engine(backend, self.cfg,
-                          self.state if state is None else state)
+        if backend == "sparse_csr":
+            # one atomic read of the (state, engine) pair: publishes swap
+            # the whole tuple, so a racing reader sees a matched pair or
+            # misses the identity check and builds its own — never a
+            # stale engine for the wrong state
+            pair = self._sparse_serving
+            if pair is not None and pair[0] is st:
+                return pair[1]
+        return get_engine(backend, self.cfg, st)
 
     def shed_engine_for(self, bucket: int, state: TMState | None = None):
         """The (cached) overload-tier engine (``policy.shed_backend``).
@@ -1292,7 +1382,11 @@ class TMServer:
         Lifecycle keys: ``history`` (versions retained in the bounded
         ring + its capacity), ``rollbacks``, ``checkpoint`` (directory,
         last step written, pending async writers, restored-from step;
-        ``None`` when checkpointing is off), and ``probe`` (``None``
+        ``None`` when checkpointing is off), ``routing_updates`` (how
+        many publishes actually changed the route table — density drift
+        crossing the heuristic boundary), ``sparse_layout`` (the
+        serving ``IncrementalEll``'s refresh counters, ``None`` until a
+        ``sparse_csr`` route exists), and ``probe`` (``None``
         when drift monitoring is off; otherwise latest/best accuracy,
         ``drift`` = best − latest ≥ 0, ``delta`` = latest − previous,
         window mean, eval count — how an operator reads regression, see
@@ -1321,6 +1415,7 @@ class TMServer:
                 "shed_rows": self._n_shed_rows,
                 "cascade_rows": self._n_cascade_rows,
                 "escalated_rows": self._n_escalated_rows,
+                "routing_updates": self._n_routing_updates,
             }
         p50_ms, p90_ms, p99_ms = percentiles_ms(lats, (0.50, 0.90, 0.99))
         ckpt_stats = None
@@ -1366,6 +1461,9 @@ class TMServer:
             "checkpoint": ckpt_stats,
             "probe": probe_stats,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
+            "routing_updates": snap["routing_updates"],
+            "sparse_layout": (None if self._serve_ell is None
+                              else self._serve_ell.stats()),
             "pipeline": {
                 "depth": self.policy.pipeline_depth,
                 "inflight": snap["inflight"],
