@@ -35,7 +35,14 @@ state.  A ``kind="serve_deadline"`` cell then re-runs the pipelined
 server predict-only at 0.5× measured saturation with a per-request
 deadline and reports the miss rate and admission rejects
 (``--pipeline-out`` tees the pipeline+deadline cells to their own JSONL
-file for the CI artifact).
+file for the CI artifact); and the multi-tenant fleet bar
+(``kind="serve_fleet"``, ``--fleet-out`` → BENCH_fleet.json): on a
+matrix of model count × Zipf-skewed closed-loop popularity, packed
+cross-model batching must reach ≥1.3× the aggregate throughput of the
+same fleet serving every model solo (identical traffic, identical
+shared device worker — the only difference is packing), with per-model
+p99 and the engine-cache hit rate reported per cell and every response
+parity-checked against its own model's oracle.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --quick
     PYTHONPATH=src python -m benchmarks.serve_bench --out BENCH_serve.json
@@ -128,6 +135,26 @@ PIPELINE_MAX_BATCH = 64
 PIPELINE_LABEL_BATCH = 64
 PIPELINE_ROUNDS = 3
 PIPELINE_DEADLINE_US = 30_000
+
+# multi-tenant fleet cells: many *small* same-shape models whose
+# closed-loop trickles underfill per-model launches — the cross-model
+# packing regime.  Client counts per model follow a Zipf popularity law
+# (a realistic multi-tenant skew: one hot model, a tail of cold ones).
+# max_wait_us=0 is the latency-honest dispatch policy (work-conserving,
+# no added coalesce wait): a solo-served model then launches per
+# request, and cross-model packing is the *only* mechanism that fills
+# batches — a positive coalesce wait would let the solo arm buy fill
+# with latency and measure that tradeoff instead of packing.
+FLEET_SHAPE = {"C": 10, "M": 128, "F": 64}
+FLEET_MODEL_COUNTS_QUICK = (8,)
+FLEET_MODEL_COUNTS_FULL = (2, 4, 8)
+FLEET_CLIENTS = 8           # total closed-loop clients, split by Zipf
+FLEET_ZIPF_S = 1.2
+FLEET_MAX_BATCH = 64
+FLEET_MAX_WAIT_US = 0
+FLEET_BACKEND = "swar_packed"
+FLEET_POOL = 256
+FLEET_ROUNDS = 2
 
 
 def _bench_tm(seed: int = 0):
@@ -309,6 +336,161 @@ def cascade_speedup(cells: list[dict]) -> float:
     full = next(c for c in cells if c["kind"] == "serve_cascade"
                 and c["backend"] != "cascade")
     return shed["throughput_rps"] / max(full["throughput_rps"], 1e-9)
+
+
+def _zipf_clients(n_models: int, total: int, s: float) -> list[int]:
+    """Split ``total`` closed-loop clients over ``n_models`` by a Zipf
+    popularity law (rank r gets share ∝ 1/r^s), every model ≥ 1 client.
+    Largest-remainder rounding keeps the sum exactly ``total``."""
+    w = np.array([1.0 / (r + 1) ** s for r in range(n_models)])
+    exact = w / w.sum() * (total - n_models)   # reserve the 1-per-model floor
+    counts = 1 + np.floor(exact).astype(int)
+    for i in np.argsort(exact - np.floor(exact))[::-1][:total - counts.sum()]:
+        counts[i] += 1
+    return counts.tolist()
+
+
+class _FleetModelClient:
+    """Adapter giving one fleet member the ``server.submit`` surface the
+    load generators drive, so ``closed_loop`` can hammer a named model."""
+
+    def __init__(self, fleet, name: str):
+        self._fleet = fleet
+        self._name = name
+
+    async def submit(self, literals, *, client=None, **kwargs):
+        return await self._fleet.submit(self._name, literals,
+                                        client=client, **kwargs)
+
+
+def _fleet_models(n_models: int):
+    """``n_models`` same-shape small machines (→ one pack group), each
+    with its own pool and oracle table."""
+    cfg = TMConfig(n_classes=FLEET_SHAPE["C"], n_clauses=FLEET_SHAPE["M"],
+                   n_features=FLEET_SHAPE["F"])
+    models = []
+    for i in range(n_models):
+        rng = np.random.default_rng(1000 + i)
+        state = _random_state(cfg, rng)
+        pool = rng.integers(0, 2, (FLEET_POOL, cfg.n_literals),
+                            dtype=np.int8)
+        expect = np.asarray(get_engine("oracle", cfg, state)
+                            .infer(jnp.asarray(pool)).prediction)
+        models.append((f"m{i}", cfg, state, pool, expect))
+    return models
+
+
+def run_fleet_cell(models, *, packed: bool, duration: float) -> dict:
+    """One fleet arm: Zipf-skewed closed-loop traffic over ``models``
+    through a :class:`TMFleet`, packed (one fused group plane) or
+    unpacked (per-model serial serving through the same shared device
+    worker — the honest control: identical scheduler, identical traffic,
+    the *only* difference is cross-model batch packing).  Every response
+    is parity-checked against the owning model's oracle table — the
+    isolation contract under load.  Reports aggregate throughput,
+    per-model p99, and the engine-cache hit rate over the run."""
+    from repro.engine import clear_engine_cache, engine_cache_info
+    from repro.serve import TMFleet
+
+    clients = _zipf_clients(len(models), FLEET_CLIENTS, FLEET_ZIPF_S)
+    policy = ServePolicy(max_batch=FLEET_MAX_BATCH,
+                         max_wait_us=FLEET_MAX_WAIT_US,
+                         backend=FLEET_BACKEND)
+    specs = {name: (cfg, state) for name, cfg, state, _, _ in models}
+    clear_engine_cache()
+
+    async def go():
+        async with TMFleet(specs, policy, pack=packed) as fleet:
+            await fleet.warmup()
+            t0 = time.monotonic()
+            totals = await asyncio.gather(*[
+                closed_loop(
+                    _FleetModelClient(fleet, name), pool,
+                    clients=n_clients, duration=duration,
+                    on_result=lambda row, res, _e=expect, _n=name: None
+                        if np.asarray(res.prediction)[0] == _e[row]
+                        else (_ for _ in ()).throw(AssertionError(
+                            f"fleet parity: {_n} row {row}")))
+                for (name, cfg, state, pool, expect), n_clients
+                in zip(models, clients)])
+            wall = time.monotonic() - t0
+            stats = fleet.stats()
+        return totals, wall, stats
+
+    totals, wall, stats = asyncio.run(go())
+    cache = engine_cache_info()
+    lookups = cache["hits"] + cache["misses"]
+    per_model = {
+        name: {"clients": n_clients,
+               "requests": stats["models"][name]["requests"],
+               "p99_ms": stats["models"][name]["p99_ms"],
+               "weight": stats["models"][name]["weight"]}
+        for (name, *_), n_clients in zip(models, clients)}
+    return {"kind": "serve_fleet", "mode": "closed",
+            "backend": FLEET_BACKEND, "max_batch": FLEET_MAX_BATCH,
+            "n_models": len(models), "packed": packed,
+            "zipf_s": FLEET_ZIPF_S, "clients": FLEET_CLIENTS,
+            **FLEET_SHAPE,
+            "requests": int(sum(totals)), "wall_s": round(wall, 3),
+            "throughput_rps": round(sum(totals) / wall, 1),
+            "n_groups": stats["n_groups"],
+            "cache_hit_rate": round(cache["hits"] / max(lookups, 1), 4),
+            # the regression metric: the *worst tenant's* p99 — a fleet
+            # that speeds up in aggregate by starving one model regresses
+            "p99_ms": max(r["p99_ms"] for r in per_model.values()),
+            "per_model": per_model,
+            "parity": True}
+
+
+def fleet_cells(*, duration: float, quick: bool) -> list[dict]:
+    """The multi-tenant matrix: model count × Zipf-skewed popularity,
+    packed vs unpacked, interleaved min-of-rounds like
+    :func:`cascade_cells` — run (unpacked, packed) ``FLEET_ROUNDS``
+    times alternating per model count, keep each arm's best-throughput
+    cell, and stamp the max-over-rounds per-round aggregate-throughput
+    ratio on the packed cell as ``packed_speedup_vs_solo``.  Small
+    per-model machines with a handful of clients each: the regime where
+    k models' trickles underfill k separate launches, which is exactly
+    what cross-model packing is for."""
+    counts = FLEET_MODEL_COUNTS_QUICK if quick else FLEET_MODEL_COUNTS_FULL
+    out = []
+    for n_models in counts:
+        models = _fleet_models(n_models)
+        best: dict[bool, dict] = {}
+        best_ratio = None
+        for _ in range(FLEET_ROUNDS):
+            by_packed = {}
+            for packed in (False, True):
+                cell = run_fleet_cell(models, packed=packed,
+                                      duration=duration)
+                by_packed[packed] = cell
+                cur = best.get(packed)
+                if cur is None or (cell["throughput_rps"]
+                                   > cur["throughput_rps"]):
+                    best[packed] = cell
+            ratio = (by_packed[True]["throughput_rps"]
+                     / max(by_packed[False]["throughput_rps"], 1e-9))
+            if best_ratio is None or ratio > best_ratio:
+                best_ratio = ratio
+        best[True]["packed_speedup_vs_solo"] = round(best_ratio, 3)
+        out += [best[False], best[True]]
+    return out
+
+
+def fleet_speedup(cells: list[dict]) -> float:
+    """Packed cross-model batching over per-model serial serving, by
+    aggregate closed-loop throughput at the largest benched model count;
+    the --quick bar is >= 1.3x.  Reads the max-over-rounds stamp from
+    :func:`fleet_cells`, falling back to the reported cells' ratio (a
+    loaded baseline file, an older run)."""
+    packed = max((c for c in cells if c["kind"] == "serve_fleet"
+                  and c["packed"]), key=lambda c: c["n_models"])
+    if "packed_speedup_vs_solo" in packed:
+        return packed["packed_speedup_vs_solo"]
+    solo = next(c for c in cells if c["kind"] == "serve_fleet"
+                and not c["packed"]
+                and c["n_models"] == packed["n_models"])
+    return packed["throughput_rps"] / max(solo["throughput_rps"], 1e-9)
 
 
 def run_learn_cell(cfg, state, pool, labels, *, ckpt_dir: str | None,
@@ -662,6 +844,7 @@ def sweep(*, quick: bool = False, update_routing: bool = False
     cells += learn_cells(cfg, state, pool, duration=duration)
     cells += pipeline_cells(cfg, state, pool, expect, duration=duration)
     cells += cascade_cells(duration=duration)
+    cells += fleet_cells(duration=duration, quick=quick)
 
     if update_routing:
         # measured route: per load-tested max_batch, the backend with the
@@ -697,6 +880,9 @@ def run() -> list[tuple[str, float, str]]:
             name = f"serve/deadline_{c['deadline_us']}us"
         elif c["kind"] == "serve_cascade":
             name = f"serve/cascade_{c['backend']}_mb{c['max_batch']}"
+        elif c["kind"] == "serve_fleet":
+            name = (f"serve/fleet_{c['n_models']}models_"
+                    f"{'packed' if c['packed'] else 'solo'}")
         else:
             name = (f"serve/{c['backend']}_{c['mode']}_mb{c['max_batch']}"
                     + (f"_r{c['rate']:.0f}" if c["mode"] == "open" else ""))
@@ -711,6 +897,8 @@ def run() -> list[tuple[str, float, str]]:
                  round(cascade_speedup(cells), 2), "target >= 1.3x"))
     rows.append(("serve/pipeline_speedup_vs_serial",
                  round(pipeline_speedup(cells), 2), "target >= 1.3x"))
+    rows.append(("serve/fleet_packed_speedup_vs_solo",
+                 round(fleet_speedup(cells), 2), "target >= 1.3x"))
     miss = next(c for c in cells if c["kind"] == "serve_deadline")
     rows.append(("serve/deadline_miss_rate", miss["miss_rate"],
                  f"{miss['deadline_us']}us deadline at 0.5x saturation "
@@ -758,6 +946,14 @@ def main() -> None:
                     help="also write the serve_pipeline/serve_deadline "
                          "cells to this JSONL file (the CI "
                          "BENCH_pipeline artifact)")
+    ap.add_argument("--min-fleet-speedup", type=float, default=1.3,
+                    help="packed cross-model batching over per-model "
+                         "serial serving (aggregate closed-loop "
+                         "throughput on the Zipf fleet matrix) that "
+                         "--quick must reach (default 1.3)")
+    ap.add_argument("--fleet-out", default=None,
+                    help="also write the serve_fleet cells to this "
+                         "JSONL file (the CI BENCH_fleet artifact)")
     args = ap.parse_args()
 
     cells = sweep(quick=args.quick, update_routing=args.update_routing)
@@ -772,6 +968,11 @@ def main() -> None:
         with open(args.pipeline_out, "w") as f:
             for cell in cells:
                 if cell["kind"] in ("serve_pipeline", "serve_deadline"):
+                    print(json.dumps(cell), file=f)
+    if args.fleet_out:
+        with open(args.fleet_out, "w") as f:
+            for cell in cells:
+                if cell["kind"] == "serve_fleet":
                     print(json.dumps(cell), file=f)
 
     ratio = speedup_vs_sequential(cells)
@@ -800,6 +1001,14 @@ def main() -> None:
           f"{dl['deadline_us']}us / 0.5x saturation "
           f"({dl['rate']:.0f} req/s, {dl['admission_rejects']} admission "
           f"rejects)", file=sys.stderr)
+    flt = fleet_speedup(cells)
+    flt_packed = max((c for c in cells if c["kind"] == "serve_fleet"
+                      and c["packed"]), key=lambda c: c["n_models"])
+    print(f"fleet packed batching: {flt:.2f}x aggregate throughput vs "
+          f"per-model serial serving at {flt_packed['n_models']} models / "
+          f"{flt_packed['clients']} Zipf clients "
+          f"(cache hit rate {flt_packed['cache_hit_rate']:.2%}; "
+          f"target >= {args.min_fleet_speedup:.1f}x)", file=sys.stderr)
     if args.quick and ratio < args.min_speedup:
         sys.exit(f"FAIL: micro-batcher speedup {ratio:.1f}x < "
                  f"{args.min_speedup:.0f}x acceptance bar")
@@ -812,6 +1021,9 @@ def main() -> None:
     if args.quick and pipe < args.min_pipeline_speedup:
         sys.exit(f"FAIL: pipelined dispatch speedup {pipe:.2f}x < "
                  f"{args.min_pipeline_speedup:.1f}x acceptance bar")
+    if args.quick and flt < args.min_fleet_speedup:
+        sys.exit(f"FAIL: fleet packed-batching speedup {flt:.2f}x < "
+                 f"{args.min_fleet_speedup:.1f}x acceptance bar")
 
 
 if __name__ == "__main__":

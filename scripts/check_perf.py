@@ -27,7 +27,10 @@ Handles three row kinds in any of the given files:
   and ``kind="serve_deadline"``) live in the same baseline, keyed by
   (kind, mode, backend, max_batch, pipeline_depth): the deadline
   cell's rate is 0.5× the *measured* saturation of that run, so rate
-  would make the key unmatchable across runs.
+  would make the key unmatchable across runs.  Fleet rows
+  (``kind="serve_fleet"`` — the multi-tenant packed-vs-solo matrix)
+  are keyed by (kind, mode, backend, n_models, packed) with metric
+  ``p99_ms`` = the worst tenant's p99 for that cell.
 - train rows (``benchmarks/train_bench.py``, ``kind`` of ``train``):
   keyed by (kind, backend, C, M, B), metric ``step_us`` (lower is
   better), baseline ``benchmarks/baseline_train.json``.  Sparse matrix
@@ -65,6 +68,13 @@ def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
     if kind in ("serve_pipeline", "serve_deadline"):
         key = (kind, cell.get("mode"), cell["backend"],
                cell.get("max_batch", 0), cell.get("pipeline_depth", 0))
+        return key, "p99_ms", "serve"
+    if kind == "serve_fleet":
+        # keyed by the matrix coordinates (model count × packed arm);
+        # the metric is the worst tenant's p99 — aggregate throughput
+        # bought by starving one model must read as a regression
+        key = (kind, cell.get("mode"), cell["backend"],
+               cell.get("n_models", 0), bool(cell.get("packed")))
         return key, "p99_ms", "serve"
     if kind in ("serve", "serve_baseline", "serve_learn",
                 "serve_learn_ckpt", "serve_cascade"):

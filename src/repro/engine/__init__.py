@@ -10,7 +10,9 @@
 from .base import (DEFAULT_BACKEND, EngineResult, ServiceStats, VoteEngine,
                    available_backends, clear_engine_cache, engine_cache_info,
                    evict_engines_for_state, get_engine, infer_padded,
-                   nearest_rank, pad_batch, register_backend)
+                   nearest_rank, pad_batch, register_backend,
+                   set_engine_cache_budget, state_nbytes,
+                   weight_engines_for_state)
 from . import backends  # noqa: F401  (registers the built-in backends)
 from . import cascade  # noqa: F401  (registers the early-exit cascade)
 from .sharding import ShardedEngine
@@ -26,7 +28,8 @@ __all__ = ["DEFAULT_BACKEND", "DEFAULT_TRAIN_BACKEND", "EngineResult",
            "available_backends", "available_train_backends",
            "clear_engine_cache", "clear_train_engine_cache",
            "engine_cache_info", "train_engine_cache_info",
-           "evict_engines_for_state",
+           "evict_engines_for_state", "weight_engines_for_state",
+           "set_engine_cache_budget", "state_nbytes",
            "get_engine", "get_train_engine", "infer_padded", "pad_batch",
            "register_backend", "register_train_backend",
            "export_key_cursor", "import_key_cursor", "train_engine_opts",

@@ -63,7 +63,8 @@ __all__ = ["EngineResult", "VoteEngine", "Registry", "KeyedEngineCache",
            "ServiceStats", "nearest_rank",
            "register_backend", "get_engine",
            "available_backends", "clear_engine_cache", "engine_cache_info",
-           "evict_engines_for_state",
+           "evict_engines_for_state", "weight_engines_for_state",
+           "set_engine_cache_budget", "state_nbytes",
            "pad_batch", "infer_padded", "DEFAULT_BACKEND"]
 
 DEFAULT_BACKEND = "oracle"
@@ -144,9 +145,16 @@ class KeyedEngineCache:
     ``len`` → ``popitem``) race without one.
     """
 
-    def __init__(self, maxsize: int):
+    def __init__(self, maxsize: int, max_bytes: int | None = None):
         self.maxsize = maxsize
+        self.max_bytes = max_bytes
         self._data: OrderedDict[tuple, tuple] = OrderedDict()
+        self._bytes = 0
+        # id(array) -> (weakref-or-None, weight): the per-model weight
+        # registry backing weighted eviction.  Keyed like entry pinning
+        # (array identity) so a weight registered for a model's state
+        # covers every engine built on that state.
+        self._weights: dict[int, tuple] = {}
         self._stats = {"hits": 0, "misses": 0, "evictions": 0,
                        "superseded": 0}
         self._lock = threading.RLock()
@@ -161,28 +169,111 @@ class KeyedEngineCache:
             self._stats["hits"] += 1
             return hit[1]
 
-    def insert(self, key, state, engine) -> None:
+    def set_state_weight(self, state, weight: float) -> None:
+        """Register eviction ``weight`` for every array in ``state``.
+
+        Entries pinned to a weighted array are evicted *after* lighter
+        ones regardless of recency (weight first, LRU as tie-break), so
+        a hot model's engines survive budget pressure from cold
+        siblings.  Unweighted entries default to weight 1.0.  The
+        registry holds weakrefs — a weight dies with its arrays and can
+        never pin them.
+        """
+        w = float(weight)
+        for a in state:
+            i = id(a)
+
+            def _drop(_ref, _i=i):
+                with self._lock:
+                    self._weights.pop(_i, None)
+
+            try:
+                ref = weakref.ref(a, _drop)
+            except TypeError:    # non-weakreferenceable leaf: weight only
+                ref = None
+            with self._lock:
+                self._weights[i] = (ref, w)
+
+    def _entry_weight_locked(self, refs) -> float:
+        """Max registered weight over an entry's live pinned arrays."""
+        w = None
+        for r in refs:
+            obj = r() if isinstance(r, weakref.ref) else r
+            if obj is None:
+                continue
+            reg = self._weights.get(id(obj))
+            if reg is not None and (w is None or reg[1] > w):
+                w = reg[1]
+        return 1.0 if w is None else w
+
+    def _evict_one_locked(self) -> None:
+        """Evict the minimum-(weight, LRU-age) entry (capacity path)."""
+        victim, vw = None, None
+        for k, ent in self._data.items():    # oldest -> newest
+            w = self._entry_weight_locked(ent[0])
+            if vw is None or w < vw:         # strict <: ties keep oldest
+                victim, vw = k, w
+        if victim is not None:
+            self._bytes -= self._data.pop(victim)[2]
+            self._stats["evictions"] += 1
+
+    def _over_budget_locked(self) -> bool:
+        return len(self._data) > self.maxsize or \
+            (self.max_bytes is not None and self._bytes > self.max_bytes)
+
+    def set_budget(self, maxsize: int | None = None,
+                   max_bytes: int | None = None) -> None:
+        """Update the entry and/or byte budget and evict down to it.
+
+        ``None`` leaves a limit unchanged; ``max_bytes <= 0`` removes the
+        byte limit.  Eviction under the new budget is weighted (see
+        :meth:`set_state_weight`).
+        """
+        with self._lock:
+            if maxsize is not None:
+                self.maxsize = int(maxsize)
+            if max_bytes is not None:
+                self.max_bytes = int(max_bytes) if max_bytes > 0 else None
+            while self._data and self._over_budget_locked():
+                self._evict_one_locked()
+
+    def insert(self, key, state, engine, nbytes: int | None = None) -> None:
         """Cache ``engine`` under ``key``, pinned to ``state``'s arrays.
 
         Holds only weakrefs to the arrays (self-evicting, see class
         docstring); a non-weakreferenceable leaf pins the array instead.
-        Evicts least-recently-used entries past ``maxsize``.
+        ``nbytes`` (default: the summed ``nbytes`` of ``state``'s
+        arrays, a proxy for the engine's layout footprint) charges the
+        byte budget.  Evicts minimum-(weight, LRU-age) entries past
+        ``maxsize`` / ``max_bytes``.  Replacing an existing key (the
+        benign duplicate-build race in :func:`get_engine`) counts the
+        displaced twin under ``"evictions"`` — otherwise ``misses``
+        would silently stop reconciling with
+        ``size + evictions + superseded``.
         """
         def _evict(_ref, _key=key):
             with self._lock:
-                if self._data.pop(_key, None) is not None:
+                ent = self._data.pop(_key, None)
+                if ent is not None:
+                    self._bytes -= ent[2]
                     self._stats["evictions"] += 1
 
         try:
             refs = tuple(weakref.ref(a, _evict) for a in state)
         except TypeError:       # non-weakreferenceable leaf: pin instead
             refs = tuple(state)
+        if nbytes is None:
+            nbytes = sum(int(getattr(a, "nbytes", 0)) for a in state)
         with self._lock:
             self._stats["misses"] += 1
-            self._data[key] = (refs, engine)
-            while len(self._data) > self.maxsize:
-                self._data.popitem(last=False)
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._bytes -= old[2]
                 self._stats["evictions"] += 1
+            self._data[key] = (refs, engine, nbytes)
+            self._bytes += nbytes
+            while self._data and self._over_budget_locked():
+                self._evict_one_locked()
 
     def evict_state(self, state) -> int:
         """Drop every entry pinned to any of ``state``'s arrays → count.
@@ -205,15 +296,15 @@ class KeyedEngineCache:
             return obj is not None and id(obj) in targets
 
         with self._lock:
-            stale = [k for k, (refs, _) in self._data.items()
-                     if any(_held(r) for r in refs)]
+            stale = [k for k, ent in self._data.items()
+                     if any(_held(r) for r in ent[0])]
             for k in stale:
-                del self._data[k]
+                self._bytes -= self._data.pop(k)[2]
             self._stats["superseded"] += len(stale)
             return len(stale)
 
     def clear(self) -> None:
-        """Drop every cached engine and reset all counters.
+        """Drop every cached engine, registered weight, and counter.
 
         A deliberate ``clear`` is not an eviction: the counter tracks
         entries pushed out by capacity or state death, the cache-health
@@ -221,15 +312,18 @@ class KeyedEngineCache:
         """
         with self._lock:
             self._data.clear()
+            self._weights.clear()
+            self._bytes = 0
             for k in self._stats:
                 self._stats[k] = 0
 
     def info(self) -> dict:
-        """``{"size", "maxsize", "hits", "misses", "evictions",
-        "superseded"}``."""
+        """``{"size", "maxsize", "bytes", "max_bytes", "weights",
+        "hits", "misses", "evictions", "superseded"}``."""
         with self._lock:
             return {"size": len(self._data), "maxsize": self.maxsize,
-                    **self._stats}
+                    "bytes": self._bytes, "max_bytes": self.max_bytes,
+                    "weights": len(self._weights), **self._stats}
 
 
 def nearest_rank(sorted_vals, p: float) -> float:
@@ -369,6 +463,38 @@ def evict_engines_for_state(state: TMState) -> int:
     pressure (see :meth:`KeyedEngineCache.evict_state`).
     """
     return _ENGINE_CACHE.evict_state(state)
+
+
+def weight_engines_for_state(state: TMState, weight: float) -> None:
+    """Register eviction ``weight`` for engines built on ``state``.
+
+    The fleet seam for weighted eviction: ``TMFleet`` registers each
+    model's request share here on every publish, so under a shared
+    budget a hot model's engines outlive a cold model's regardless of
+    which was touched last (see
+    :meth:`KeyedEngineCache.set_state_weight`).
+    """
+    _ENGINE_CACHE.set_state_weight(state, weight)
+
+
+def set_engine_cache_budget(max_entries: int | None = None,
+                            max_bytes: int | None = None) -> dict:
+    """Set the process-wide engine-cache budget → fresh cache info.
+
+    ``max_entries`` bounds entry count (default ``ENGINE_CACHE_SIZE``);
+    ``max_bytes`` bounds the summed state-array footprint of cached
+    layouts (``<= 0`` removes the byte limit).  ``None`` leaves a limit
+    unchanged.  Shrinking evicts immediately, minimum-weight first.
+    """
+    _ENGINE_CACHE.set_budget(max_entries, max_bytes)
+    return _ENGINE_CACHE.info()
+
+
+def state_nbytes(state) -> int:
+    """Summed ``nbytes`` over a state pytree's array leaves — the byte
+    proxy the engine cache charges per entry, exposed so fleet budget
+    math (``set_engine_cache_budget``) can be phrased in model sizes."""
+    return sum(int(getattr(a, "nbytes", 0)) for a in state)
 
 
 class DonatingEngine:

@@ -12,7 +12,8 @@ from .loadgen import (DeadlineExceeded, closed_loop, open_loop,
                       percentiles_ms)
 from .tm_server import (ServePolicy, TMServer, bucket_for, default_buckets,
                         route_buckets)
+from .tm_fleet import TMFleet, fuse_states, pack_key
 
-__all__ = ["DeadlineExceeded", "ServePolicy", "TMServer", "bucket_for",
-           "closed_loop", "default_buckets", "open_loop", "percentiles_ms",
-           "route_buckets"]
+__all__ = ["DeadlineExceeded", "ServePolicy", "TMFleet", "TMServer",
+           "bucket_for", "closed_loop", "default_buckets", "fuse_states",
+           "open_loop", "pack_key", "percentiles_ms", "route_buckets"]

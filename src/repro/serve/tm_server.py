@@ -365,7 +365,9 @@ class TMServer:
                  probe: tuple | None = None,
                  probe_every_updates: int = 0,
                  probe_window: int = 256,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 on_publish=None,
+                 executor: ThreadPoolExecutor | None = None):
         self.cfg = cfg
         # one lock for every counter stats() reads: fan-out, the update
         # path and stats() itself all take it, so a stats() snapshot is
@@ -396,6 +398,11 @@ class TMServer:
         # swapped as one tuple so lock-free readers see a matched pair
         self._serve_ell: IncrementalEll | None = None
         self._sparse_serving: tuple[TMState, object] | None = None
+        # fleet seam: called as on_publish(version, state) after every
+        # publish (including this constructor one); hook errors are
+        # contained (counted, never propagated into the update path)
+        self._on_publish = on_publish
+        self._n_publish_hook_errors = 0
         self._publish(0, state)
         self._train_engine = None
         self._train_key = None
@@ -462,8 +469,13 @@ class TMServer:
         self._inflight = 0
         self._inflight_versions: dict[int, int] = {}
         self._svc = ServiceStats()        # per-bucket service-time ring
-        self._pool = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="tm-serve-infer")
+        # executor= shares one device-worker thread across servers (the
+        # fleet's single-device model); the server only shuts down a
+        # pool it created itself
+        self._owns_pool = executor is None
+        self._pool = executor if executor is not None else \
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix="tm-serve-infer")
         self._task: asyncio.Task | None = None
         self._closed = False
         self._stop_seen = False
@@ -508,6 +520,28 @@ class TMServer:
             self._history.append((version, state))
         self._refresh_serving(
             state, superseded=prev[1] if prev is not None else None)
+        if self._on_publish is not None:
+            try:
+                self._on_publish(version, state)
+            except Exception:
+                # a broken observer must not poison the publish/update
+                # path — count it and keep serving the new state
+                with self._mu:
+                    self._n_publish_hook_errors += 1
+
+    def publish(self, state: TMState) -> int:
+        """Swap in ``state`` as a new version (bumped by one) → version.
+
+        The fleet republish path: a pack-group server's fused state is
+        rebuilt outside any training step, so its version counter just
+        advances monotonically.  Runs the full publish path (history
+        ring, route re-resolution, superseded-engine eviction,
+        ``on_publish`` hook).  Call from the event-loop thread only,
+        like every other lifecycle mutation.
+        """
+        version = self._current[0] + 1
+        self._publish(version, state)
+        return version
 
     def _refresh_serving(self, state: TMState, *,
                          superseded: TMState | None = None) -> None:
@@ -595,7 +629,8 @@ class TMServer:
         await self._queue.put(_STOP)
         if self._task is not None:
             await self._task
-        self._pool.shutdown(wait=True)
+        if self._owns_pool:
+            self._pool.shutdown(wait=True)
         if self._train_pool is not None:
             self._train_pool.shutdown(wait=True)
         if (self._ckpt_dir is not None
@@ -1416,6 +1451,7 @@ class TMServer:
                 "cascade_rows": self._n_cascade_rows,
                 "escalated_rows": self._n_escalated_rows,
                 "routing_updates": self._n_routing_updates,
+                "publish_hook_errors": self._n_publish_hook_errors,
             }
         p50_ms, p90_ms, p99_ms = percentiles_ms(lats, (0.50, 0.90, 0.99))
         ckpt_stats = None
@@ -1446,6 +1482,7 @@ class TMServer:
             "rows": snap["rows"],
             "batches": snap["batches"],
             "errors": snap["errors"],
+            "publish_hook_errors": snap["publish_hook_errors"],
             "qdepth": self._qdepth(),
             "mean_batch_rows": snap["rows"] / max(snap["batches"], 1),
             "batch_fill": snap["rows"] / max(snap["padded"], 1),

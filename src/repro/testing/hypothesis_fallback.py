@@ -17,9 +17,28 @@ import sys
 import types
 import zlib
 
-__all__ = ["given", "settings", "strategies", "install"]
+__all__ = ["given", "settings", "strategies", "install", "set_seed",
+           "current_seed"]
 
 _FILTER_TRIES = 500     # rejection-sampling budget per draw
+
+# session seed XOR'd into every test's per-qualname rng seed.  0 (the
+# default) reproduces the historical per-test streams; tests/conftest.py
+# sets it from --hypothesis-seed so a failing draw reproduces with one
+# flag, and prints it in the pytest header.
+_SEED = 0
+
+
+def set_seed(seed: int) -> None:
+    """Set the session seed mixed into every ``@given`` rng
+    (``--hypothesis-seed`` plumbing; see ``tests/conftest.py``)."""
+    global _SEED
+    _SEED = int(seed)
+
+
+def current_seed() -> int:
+    """The active session seed (0 unless ``--hypothesis-seed`` set it)."""
+    return _SEED
 
 
 class Unsatisfied(Exception):
@@ -91,8 +110,10 @@ def given(*strats: SearchStrategy, **kw_strats: SearchStrategy):
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_fallback_max_examples", 100)
             # crc32, not hash(): stable across processes (PYTHONHASHSEED),
-            # so a failing draw reproduces on rerun; varied per test
-            rng = random.Random(zlib.crc32(test_fn.__qualname__.encode()))
+            # so a failing draw reproduces on rerun; varied per test,
+            # shifted as one session by --hypothesis-seed
+            rng = random.Random(
+                zlib.crc32(test_fn.__qualname__.encode()) ^ _SEED)
             done = attempts = 0
             while done < n and attempts < n * 50:
                 attempts += 1
@@ -101,7 +122,20 @@ def given(*strats: SearchStrategy, **kw_strats: SearchStrategy):
                     kvals = {k: s.draw(rng) for k, s in kw_strats.items()}
                 except Unsatisfied:
                     continue
-                test_fn(*args, *vals, **kwargs, **kvals)
+                try:
+                    test_fn(*args, *vals, **kwargs, **kvals)
+                except Exception:
+                    # the reproduction one-liner: the failing example is
+                    # fully determined by (qualname, session seed, index)
+                    print(
+                        f"\n[hypothesis-fallback] falling example "
+                        f"{done + 1}/{n} of {test_fn.__qualname__} "
+                        f"(args={vals!r} kwargs={kvals!r}); reproduce: "
+                        f"PYTHONPATH=src python -m pytest "
+                        f"'tests -k {test_fn.__name__}' "
+                        f"--hypothesis-seed={_SEED}",
+                        file=sys.stderr)
+                    raise
                 done += 1
             if done == 0:
                 raise Unsatisfied(
@@ -116,6 +150,7 @@ def install() -> None:
     """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
     hyp = types.ModuleType("hypothesis")
     hyp.given, hyp.settings = given, settings
+    hyp.set_seed, hyp.current_seed = set_seed, current_seed
     strat = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "booleans", "floats", "sampled_from", "lists"):
         setattr(strat, name, globals()[name])

@@ -1,9 +1,20 @@
-"""Test bootstrap: src/ on sys.path + hypothesis fallback.
+"""Test bootstrap: src/ on sys.path, hypothesis fallback + hygiene.
 
 Keeps the tier-1 command working even without PYTHONPATH=src, and lets the
 property tests collect on hermetic images that lack ``hypothesis`` (the
 shim in ``repro.testing.hypothesis_fallback`` runs the same invariants via
 seeded random sampling; real hypothesis is preferred when installed).
+
+Property-suite hygiene, both flavors:
+
+- the active randomness source is printed in the pytest header — the
+  fallback's session seed, or the real-hypothesis profile — so every run
+  is reproducible from its own output;
+- ``--hypothesis-seed=N`` re-runs a fallback session's exact draws (real
+  hypothesis registers the same flag via its pytest plugin);
+- under real hypothesis, CI (``CI`` env set) loads a ``derandomize=True``
+  profile with ``print_blob=True``, so CI property runs are deterministic
+  and any failure prints its ``@reproduce_failure`` one-liner.
 """
 
 import os
@@ -11,8 +22,45 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+_USING_FALLBACK = False
 try:
     import hypothesis  # noqa: F401
+    _USING_FALLBACK = getattr(hypothesis, "__is_repro_fallback__", False)
 except ModuleNotFoundError:
     from repro.testing import hypothesis_fallback
     hypothesis_fallback.install()
+    _USING_FALLBACK = True
+
+
+def pytest_addoption(parser):
+    # real hypothesis's pytest plugin registers --hypothesis-seed itself;
+    # only the fallback needs our copy of the flag
+    if _USING_FALLBACK:
+        parser.addoption(
+            "--hypothesis-seed", action="store", default="0",
+            help="session seed for the hypothesis fallback shim's "
+                 "deterministic draws (printed in the run header)")
+
+
+def pytest_configure(config):
+    if _USING_FALLBACK:
+        from repro.testing import hypothesis_fallback
+        hypothesis_fallback.set_seed(
+            int(config.getoption("--hypothesis-seed")))
+    else:
+        from hypothesis import settings
+        settings.register_profile("repro-ci", derandomize=True,
+                                  print_blob=True)
+        settings.register_profile("repro-local", print_blob=True)
+        settings.load_profile(
+            "repro-ci" if os.environ.get("CI") else "repro-local")
+
+
+def pytest_report_header(config):
+    if _USING_FALLBACK:
+        from repro.testing import hypothesis_fallback
+        seed = hypothesis_fallback.current_seed()
+        return (f"hypothesis: fallback shim, seed={seed} "
+                f"(reproduce with --hypothesis-seed={seed})")
+    from hypothesis import settings
+    return f"hypothesis: real, profile={settings._current_profile}"

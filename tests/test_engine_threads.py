@@ -84,3 +84,63 @@ def test_engine_cache_concurrent_infer_correctness():
 
     with ThreadPoolExecutor(max_workers=6) as pool:
         list(pool.map(worker, range(6)))
+
+
+@pytest.mark.slow
+def test_weighted_cache_concurrent_publish_accounting():
+    """Concurrent per-model publishes against the weighted, budgeted
+    cache: counters must reconcile exactly with insertions.
+
+    Each worker plays one fleet model republishing under traffic —
+    register a weight, build engines (duplicate-build races included:
+    workers share states, so two threads miss on the same key and the
+    second insert displaces the first), and supersede its old state like
+    ``TMServer._publish``.  The invariant under every interleaving is
+
+        ``misses == size + evictions + superseded``
+
+    — every insert (a miss) is accounted for exactly once: still
+    cached, displaced/capacity-/death-evicted, or superseded.  PR 8
+    added the counters but never tested them under contention; the
+    replacement path silently leaked displaced twins (accounting
+    drift fixed in engine/base.py alongside weighted eviction).
+    """
+    from repro.engine import (evict_engines_for_state,
+                              set_engine_cache_budget,
+                              weight_engines_for_state)
+
+    clear_engine_cache()
+    set_engine_cache_budget(max_entries=6, max_bytes=0)
+    try:
+        cfg, states = _tms(24, seed=3)
+        backends = ("oracle", "swar_packed")
+
+        def publish_hammer(worker_id: int) -> int:
+            rng = random.Random(100 + worker_id)
+            for i in range(200):
+                state = states[rng.randrange(len(states))]
+                weight_engines_for_state(state, rng.uniform(0.1, 8.0))
+                get_engine(backends[i % len(backends)], cfg, state)
+                if i % 13 == worker_id % 13:
+                    # a publish superseding this worker's previous state
+                    evict_engines_for_state(
+                        states[rng.randrange(len(states))])
+                if i % 29 == 0:
+                    info = engine_cache_info()
+                    assert info["size"] <= info["maxsize"]
+            return worker_id
+
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            assert sorted(pool.map(publish_hammer, range(8))) == \
+                list(range(8))
+
+        # states list is still alive: no weakref-death evictions can be
+        # in flight, so the ledger must balance exactly
+        info = engine_cache_info()
+        assert info["misses"] == (info["size"] + info["evictions"]
+                                  + info["superseded"]), info
+        assert info["size"] <= 6
+        assert info["weights"] <= len(states) * len(states[0])
+    finally:
+        clear_engine_cache()
+        set_engine_cache_budget(max_entries=ENGINE_CACHE_SIZE, max_bytes=0)

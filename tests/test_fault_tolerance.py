@@ -1,17 +1,26 @@
 """Fault tolerance: recovery loop, elastic re-mesh restore, straggler
-watchdog (simulated — the restart path is identical for real node loss)."""
+watchdog (simulated — the restart path is identical for real node loss),
+and fleet-level fault injection: one model's failing update, corrupt
+checkpoint, or engine-build exception stays contained to that model —
+siblings keep serving bit-exact, ``stats()`` reports the per-model
+error, and recovery goes through ``rollback``/``restore``."""
 
+import asyncio
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ckpt
+from repro.core.tm import TMConfig, TMState
 from repro.distributed.fault_tolerance import (ElasticRunner,
                                                StragglerWatchdog,
                                                run_with_recovery)
+from repro.engine import get_engine
 from repro.launch.mesh import mesh_from_devices
+from repro.serve import ServePolicy, TMFleet
 
 
 def test_run_with_recovery_restarts(tmp_path):
@@ -57,3 +66,212 @@ def test_elastic_remesh_restore(tmp_path):
     assert extra["step"] == 3
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(16.0))
     assert restored["w"].sharding.mesh.devices.size == 1
+
+
+# -- fleet fault injection --------------------------------------------
+#
+# The containment contract for multi-tenant serving (ISSUE satellite):
+# a fault on one named model — bad labeled batch, corrupt checkpoint,
+# engine-build exception — must never perturb a sibling's serving path,
+# must land in that model's error/reject counters, and must be
+# recoverable with the per-model lifecycle verbs.
+
+
+def _tm(seed=0, c=3, m=7, f=9, density=0.2):
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, cfg.n_literals)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32))
+
+
+def _oracle_sums(cfg, state, lits):
+    return np.asarray(
+        get_engine("oracle", cfg, state).infer(jnp.asarray(lits)).class_sums)
+
+
+def test_fleet_failing_update_contained():
+    """A malformed labeled batch for one packed member raises to *its*
+    caller only: the sibling's responses are untouched, the error shows
+    up in the failing model's stats, and a subsequent good update goes
+    through (the member server survives its own update exception)."""
+    (cfg_a, s_a), (cfg_b, s_b) = _tm(seed=1), _tm(seed=2, density=0.4)
+    rng = np.random.default_rng(3)
+    lits = rng.integers(0, 2, (2, cfg_a.n_literals), dtype=np.int8)
+    labels = rng.integers(0, cfg_a.n_classes, 2).astype(np.int32)
+    bad_lits = np.ones((2, 6), np.int8)        # wrong literal width
+
+    async def go():
+        specs = {"a": {"cfg": cfg_a, "state": s_a, "train_backend": "fused"},
+                 "b": (cfg_b, s_b)}
+        async with TMFleet(specs, ServePolicy(max_batch=4)) as fleet:
+            b_before = await fleet.submit("b", lits)
+            with pytest.raises(Exception):
+                await fleet.submit_labeled("a", bad_lits, labels)
+            b_after = await fleet.submit("b", lits)
+            a_res = await fleet.submit("a", lits)
+            good_version = await fleet.submit_labeled("a", lits, labels)
+            return b_before, b_after, a_res, good_version, fleet.stats()
+
+    b0, b1, a_res, good_version, stats = asyncio.run(go())
+    np.testing.assert_array_equal(np.asarray(b0.class_sums),
+                                  np.asarray(b1.class_sums))
+    # the failed update neither bumped the version nor moved the state
+    np.testing.assert_array_equal(np.asarray(a_res.class_sums),
+                                  _oracle_sums(cfg_a, s_a, lits))
+    assert good_version == 1
+    assert stats["models"]["a"]["errors"] == 1
+    assert stats["models"]["a"]["errors_total"] >= 1
+    assert stats["models"]["b"]["errors"] == 0
+
+
+def test_fleet_corrupt_checkpoint_contained(tmp_path):
+    """A corrupt on-disk checkpoint fails *that model's* restore with an
+    exception — the fleet still constructs, starts, and serves every
+    model (the corrupt one from its initial state), and the sibling
+    never notices."""
+    (cfg_a, s_a), (cfg_b, s_b) = _tm(seed=4), _tm(seed=5, m=4)
+    rng = np.random.default_rng(6)
+    lits = rng.integers(0, 2, (2, cfg_a.n_literals), dtype=np.int8)
+    labels = rng.integers(0, cfg_a.n_classes, 2).astype(np.int32)
+    ckpt_dir = tmp_path / "a"
+
+    def specs():
+        return {"a": {"cfg": cfg_a, "state": s_a, "train_backend": "fused",
+                      "checkpoint_dir": str(ckpt_dir)},
+                "b": (cfg_b, s_b)}
+
+    async def write_checkpoint():
+        async with TMFleet(specs(), ServePolicy(max_batch=4)) as fleet:
+            await fleet.submit_labeled("a", lits, labels)
+            fleet.checkpoint("a")
+
+    asyncio.run(write_checkpoint())
+    shard = ckpt_dir / "step_1" / "shard_0.npz"
+    assert shard.exists()
+    shard.write_bytes(b"not a checkpoint")
+
+    async def recover():
+        fleet = TMFleet(specs(), ServePolicy(max_batch=4))
+        with pytest.raises(Exception):
+            fleet.restore("a")
+        async with fleet:
+            a_res = await fleet.submit("a", lits)
+            b_lits = rng.integers(0, 2, (2, cfg_b.n_literals), dtype=np.int8)
+            b_res = await fleet.submit("b", b_lits)
+            return a_res, b_res, b_lits, fleet.stats()
+
+    a_res, b_res, b_lits, stats = asyncio.run(recover())
+    np.testing.assert_array_equal(np.asarray(a_res.class_sums),
+                                  _oracle_sums(cfg_a, s_a, lits))
+    np.testing.assert_array_equal(np.asarray(b_res.class_sums),
+                                  _oracle_sums(cfg_b, s_b, b_lits))
+    assert stats["models"]["a"]["version"] == 0    # restore never landed
+
+
+def test_fleet_engine_build_failure_contained(monkeypatch):
+    """An engine-build exception on one model's serving plane rejects
+    that model's requests (counted under its errors) while the sibling
+    keeps serving; lifting the fault restores service with no restart."""
+    (cfg_a, s_a), (cfg_b, s_b) = _tm(seed=7), _tm(seed=8, m=4)
+    rng = np.random.default_rng(9)
+    lits_a = rng.integers(0, 2, (2, cfg_a.n_literals), dtype=np.int8)
+    lits_b = rng.integers(0, 2, (2, cfg_b.n_literals), dtype=np.int8)
+
+    import repro.serve.tm_server as tm_server_mod
+    real_get_engine = tm_server_mod.get_engine
+
+    def failing_get_engine(name, cfg, state, **kw):
+        if cfg.n_clauses == cfg_a.n_clauses:
+            raise RuntimeError("injected engine-build failure")
+        return real_get_engine(name, cfg, state, **kw)
+
+    async def go():
+        async with TMFleet({"a": (cfg_a, s_a), "b": (cfg_b, s_b)},
+                           ServePolicy(max_batch=4)) as fleet:
+            # inject after start: construction-time publishes are clean
+            monkeypatch.setattr(tm_server_mod, "get_engine",
+                                failing_get_engine)
+            with pytest.raises(RuntimeError, match="injected"):
+                await fleet.submit("a", lits_a)
+            b_res = await fleet.submit("b", lits_b)
+            monkeypatch.setattr(tm_server_mod, "get_engine",
+                                real_get_engine)
+            a_res = await fleet.submit("a", lits_a)
+            return b_res, a_res, fleet.stats()
+
+    b_res, a_res, stats = asyncio.run(go())
+    np.testing.assert_array_equal(np.asarray(b_res.class_sums),
+                                  _oracle_sums(cfg_b, s_b, lits_b))
+    np.testing.assert_array_equal(np.asarray(a_res.class_sums),
+                                  _oracle_sums(cfg_a, s_a, lits_a))
+    assert stats["models"]["a"]["errors"] == 1
+    assert stats["models"]["b"]["errors"] == 0
+
+
+def test_fleet_rollback_recovers_bad_update():
+    """Operator recovery: after updates judged bad, ``rollback(model,
+    0)`` re-publishes the initial state for that model alone — its
+    responses return to the v0 oracle, the sibling's never moved, and
+    the rollback is recorded in the member's stats."""
+    (cfg_a, s_a), (cfg_b, s_b) = _tm(seed=10), _tm(seed=11, density=0.35)
+    rng = np.random.default_rng(12)
+    lits = rng.integers(0, 2, (3, cfg_a.n_literals), dtype=np.int8)
+    labels = rng.integers(0, cfg_a.n_classes, 3).astype(np.int32)
+
+    async def go():
+        specs = {"a": {"cfg": cfg_a, "state": s_a, "train_backend": "fused"},
+                 "b": (cfg_b, s_b)}
+        async with TMFleet(specs, ServePolicy(max_batch=4)) as fleet:
+            for _ in range(2):
+                await fleet.submit_labeled("a", lits, labels)
+            new_version = fleet.rollback("a", 0)
+            a_res = await fleet.submit("a", lits)
+            b_res = await fleet.submit("b", lits)
+            return new_version, a_res, b_res, fleet.stats()
+
+    new_version, a_res, b_res, stats = asyncio.run(go())
+    assert new_version == 3                       # monotonic bump
+    np.testing.assert_array_equal(np.asarray(a_res.class_sums),
+                                  _oracle_sums(cfg_a, s_a, lits))
+    np.testing.assert_array_equal(np.asarray(b_res.class_sums),
+                                  _oracle_sums(cfg_b, s_b, lits))
+    assert stats["models"]["a"]["server"]["rollbacks"] == 1
+    assert stats["models"]["b"]["version"] == 0
+
+
+def test_fleet_restore_recovers_after_kill(tmp_path):
+    """Kill-and-restart recovery through the fleet: the checkpointed
+    model resumes at its saved version and state, the sibling starts
+    fresh, and both serve bit-exact."""
+    (cfg_a, s_a), (cfg_b, s_b) = _tm(seed=13), _tm(seed=14, m=4)
+    rng = np.random.default_rng(15)
+    lits = rng.integers(0, 2, (2, cfg_a.n_literals), dtype=np.int8)
+    labels = rng.integers(0, cfg_a.n_classes, 2).astype(np.int32)
+    ckpt_dir = tmp_path / "a"
+
+    def specs():
+        return {"a": {"cfg": cfg_a, "state": s_a, "train_backend": "fused",
+                      "checkpoint_dir": str(ckpt_dir)},
+                "b": (cfg_b, s_b)}
+
+    async def run_and_checkpoint():
+        async with TMFleet(specs(), ServePolicy(max_batch=4)) as fleet:
+            for _ in range(2):
+                await fleet.submit_labeled("a", lits, labels)
+            fleet.checkpoint("a")
+            return np.asarray((await fleet.submit("a", lits)).class_sums)
+
+    sums_before_kill = asyncio.run(run_and_checkpoint())
+
+    async def restart():
+        fleet = TMFleet(specs(), ServePolicy(max_batch=4))
+        assert fleet.restore("a") == 2
+        async with fleet:
+            return (np.asarray((await fleet.submit("a", lits)).class_sums),
+                    fleet.stats())
+
+    sums_after_restart, stats = asyncio.run(restart())
+    np.testing.assert_array_equal(sums_after_restart, sums_before_kill)
+    assert stats["models"]["a"]["version"] == 2
+    assert stats["models"]["b"]["version"] == 0

@@ -1,0 +1,816 @@
+"""Property tests for multi-tenant TMFleet serving.
+
+The isolation contract, under randomized interleaved multi-model traces:
+**every model's responses through the fleet — predictions and class sums
+— are bit-exact against a solo ``TMServer`` replaying only that model's
+requests**, across packed and unpacked buckets, mid-stream publishes
+(online updates), version pins, shed tiers, rollbacks, and
+checkpoint/restore restarts.  Plus the fleet mechanics that contract
+rests on: pack-group formation rules, fused class-sum column slicing,
+argmax tie-breaking in a segment, weighted engine-cache eviction under
+a fleet budget (with the eviction-counter reconciliation identity), and
+add/drain lifecycle.
+
+Runs under real hypothesis or the seeded fallback shim
+(``--hypothesis-seed`` reproduces a session, see tests/conftest.py).
+"""
+
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tm import TMConfig, TMState
+from repro.engine import (clear_engine_cache, engine_cache_info, get_engine,
+                          set_engine_cache_budget, state_nbytes,
+                          weight_engines_for_state)
+from repro.engine.base import ENGINE_CACHE_SIZE, KeyedEngineCache
+from repro.serve import (DeadlineExceeded, ServePolicy, TMFleet, TMServer,
+                         fuse_states, pack_key)
+from repro.serve.tm_fleet import _group_policy
+
+C, M, F = 3, 7, 9         # same cheap non-power-of-two shape as the
+                          # TMServer suite, so packing reuses its oracle
+
+
+def _tm(seed=0, c=C, m=M, f=F, density=0.2):
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, cfg.n_literals)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32))
+
+
+def _trace(models, n_ops, seed, *, update_frac=0.3, trainable=()):
+    """A deterministic interleaved multi-model op trace.
+
+    → list of ``(name, "predict", lits)`` / ``(name, "update", lits,
+    labels)``; per-model subsequences are what a solo replay serves.
+    """
+    rng = np.random.default_rng(seed)
+    names = list(models)
+    ops = []
+    for _ in range(n_ops):
+        name = names[rng.integers(len(names))]
+        cfg = models[name][0]
+        n = int(rng.integers(1, 6))
+        lits = rng.integers(0, 2, (n, cfg.n_literals), dtype=np.int8)
+        if name in trainable and rng.random() < update_frac:
+            labels = rng.integers(0, cfg.n_classes, n).astype(np.int32)
+            ops.append((name, "update", lits, labels))
+        else:
+            ops.append((name, "predict", lits))
+    return ops
+
+
+def _run_fleet(specs, policy, trace, *, pack=True, fleet_kw=None):
+    """Serve ``trace`` sequentially through a fleet → (per-model op
+    records, final stats)."""
+    out = {name: [] for name in specs}
+
+    async def go():
+        fleet = TMFleet(specs, policy, pack=pack, **(fleet_kw or {}))
+        async with fleet:
+            for name, op, *payload in trace:
+                if op == "predict":
+                    res = await fleet.submit(name, payload[0])
+                    out[name].append(
+                        ("predict", np.asarray(res.prediction),
+                         np.asarray(res.class_sums)))
+                elif op == "update":
+                    v = await fleet.submit_labeled(name, *payload)
+                    out[name].append(("update", v))
+                elif op == "rollback":
+                    out[name].append(("rollback",
+                                      fleet.rollback(name, payload[0])))
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    return out, stats
+
+
+def _run_solo(cfg, state, policy, ops, **server_kw):
+    """Replay one model's op subsequence on a solo TMServer → records."""
+    out = []
+
+    async def go():
+        async with TMServer(cfg, state, policy, **server_kw) as srv:
+            for op, *payload in ops:
+                if op == "predict":
+                    res = await srv.submit(payload[0])
+                    out.append(("predict", np.asarray(res.prediction),
+                                np.asarray(res.class_sums)))
+                elif op == "update":
+                    out.append(("update", await srv.submit_labeled(*payload)))
+                elif op == "rollback":
+                    out.append(("rollback", srv.rollback(payload[0])))
+
+    asyncio.run(go())
+    return out
+
+
+def _assert_same(fleet_ops, solo_ops, model=""):
+    assert len(fleet_ops) == len(solo_ops), model
+    for i, (a, b) in enumerate(zip(fleet_ops, solo_ops)):
+        assert a[0] == b[0], (model, i)
+        if a[0] == "predict":
+            np.testing.assert_array_equal(a[1], b[1],
+                                          err_msg=f"{model} op {i} pred")
+            np.testing.assert_array_equal(a[2], b[2],
+                                          err_msg=f"{model} op {i} sums")
+        else:
+            assert a[1] == b[1], (model, i)   # version parity
+
+
+def _isolation_check(models, specs, policy, trace, *, pack=True,
+                     server_kw=None):
+    """The contract: fleet trace vs per-model solo replay, bit-exact."""
+    fleet_out, stats = _run_fleet(specs, policy, trace, pack=pack)
+    for name, (cfg, state) in models.items():
+        ops = [(op, *payload) for n, op, *payload in trace if n == name]
+        solo = _run_solo(cfg, state, policy, ops,
+                         **(server_kw or {}).get(name, {}))
+        _assert_same(fleet_out[name], solo, model=name)
+    return stats
+
+
+# -- the isolation property ------------------------------------------
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n_ops=st.integers(min_value=4, max_value=16),
+       max_batch=st.sampled_from((2, 8)),
+       max_wait_us=st.sampled_from((0, 500)),
+       backend=st.sampled_from((None, "swar_packed")))
+def test_isolation_property_packed(seed, n_ops, max_batch, max_wait_us,
+                                   backend):
+    """Two same-shape (packed) models + interleaved predicts/updates:
+    each model bit-exact vs its solo replay, including version pins
+    across mid-stream publishes."""
+    models = {"a": _tm(seed=1), "b": _tm(seed=2, density=0.35)}
+    policy = ServePolicy(max_batch=max_batch, max_wait_us=max_wait_us,
+                         backend=backend)
+    specs = {"a": {"cfg": models["a"][0], "state": models["a"][1],
+                   "train_backend": "fused"},
+             "b": {"cfg": models["b"][0], "state": models["b"][1],
+                   "train_backend": "reference"}}
+    trace = _trace(models, n_ops, seed, trainable=("a", "b"))
+    stats = _isolation_check(
+        models, specs, policy, trace,
+        server_kw={"a": {"train_backend": "fused"},
+                   "b": {"train_backend": "reference"}})
+    assert stats["n_groups"] == 1 and stats["packed_models"] == 2
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n_ops=st.integers(min_value=4, max_value=14),
+       pack=st.booleans())
+def test_isolation_property_mixed_shapes(seed, n_ops, pack):
+    """Three models — two packable, one odd shape — interleaved: the
+    contract holds for every model whether its bucket packed or not."""
+    models = {"a": _tm(seed=3), "b": _tm(seed=4, c=5),
+              "c": _tm(seed=5, m=4, f=6)}
+    specs = {k: (cfg, st_) for k, (cfg, st_) in models.items()}
+    policy = ServePolicy(max_batch=8, max_wait_us=200)
+    trace = _trace(models, n_ops, seed)
+    stats = _isolation_check(models, specs, policy, trace, pack=pack)
+    if pack:
+        assert stats["n_groups"] == 1        # a+b share (M, F, N)
+        assert stats["models"]["c"]["packed"] is False
+    else:
+        assert stats["n_groups"] == 0
+
+
+def test_isolation_concurrent_predicts():
+    """Concurrent cross-model submission storms: any interleaving is
+    bit-exact (single state version per model — order can't matter)."""
+    models = {"a": _tm(seed=6), "b": _tm(seed=7, density=0.4),
+              "c": _tm(seed=8, c=4)}
+    rng = np.random.default_rng(9)
+    reqs = [(name, rng.integers(0, 2, (int(rng.integers(1, 6)),
+                                       models[name][0].n_literals),
+                                dtype=np.int8))
+            for name in rng.choice(list(models), 24)]
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=16)) as fleet:
+            return await asyncio.gather(
+                *[fleet.submit(name, lits) for name, lits in reqs])
+
+    results = asyncio.run(go())
+    for (name, lits), res in zip(reqs, results):
+        cfg, state = models[name]
+        ref = get_engine("oracle", cfg, state).infer(jnp.asarray(lits))
+        np.testing.assert_array_equal(np.asarray(res.prediction),
+                                      np.asarray(ref.prediction))
+        np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                      np.asarray(ref.class_sums))
+
+
+def test_single_model_fleet_matches_tmserver():
+    """A one-entry fleet is behaviorally a bare TMServer: same results,
+    versions, and no pack group."""
+    cfg, state = _tm(seed=10)
+    models = {"only": (cfg, state)}
+    policy = ServePolicy(max_batch=4, max_wait_us=100)
+    trace = _trace(models, 10, seed=11, trainable=("only",))
+    specs = {"only": {"cfg": cfg, "state": state, "train_backend": "fused"}}
+    stats = _isolation_check(models, specs, policy, trace,
+                             server_kw={"only": {"train_backend": "fused"}})
+    assert stats["n_groups"] == 0
+    assert stats["models"]["only"]["packed"] is False
+
+
+# -- packing mechanics -----------------------------------------------
+
+
+def test_packed_classsum_columns_exact():
+    """The packing theorem, no server: fused class-sum columns [lo:hi)
+    equal the solo machine's sums for every member and backend."""
+    (cfg1, s1), (cfg2, s2) = _tm(seed=12), _tm(seed=13, c=5, density=0.3)
+    fused_cfg = TMConfig(n_classes=cfg1.n_classes + cfg2.n_classes,
+                         n_clauses=M, n_features=F)
+    fused = fuse_states([s1, s2])
+    rng = np.random.default_rng(14)
+    lits = jnp.asarray(rng.integers(0, 2, (6, cfg1.n_literals),
+                                    dtype=np.int8))
+    for backend in ("oracle", "swar_packed", "adder_tree"):
+        got = np.asarray(
+            get_engine(backend, fused_cfg, fused).infer(lits).class_sums)
+        np.testing.assert_array_equal(
+            got[:, :cfg1.n_classes],
+            np.asarray(get_engine(backend, cfg1, s1).infer(lits).class_sums))
+        np.testing.assert_array_equal(
+            got[:, cfg1.n_classes:],
+            np.asarray(get_engine(backend, cfg2, s2).infer(lits).class_sums))
+
+
+def test_unpack_tie_breaking_lowest_index():
+    """All-zero-include members: every class sum ties, so each member's
+    unpacked prediction must be class 0 (the engine tie rule), not the
+    fused argmax position."""
+    cfg, s1 = _tm(seed=15, density=0.0)
+    _, s2 = _tm(seed=16, density=0.0)
+
+    async def go():
+        async with TMFleet({"a": (cfg, s1), "b": (cfg, s2)},
+                           ServePolicy(max_batch=4)) as fleet:
+            lits = np.ones((3, cfg.n_literals), np.int8)
+            ra = await fleet.submit("a", lits)
+            rb = await fleet.submit("b", lits)
+            return ra, rb
+
+    ra, rb = asyncio.run(go())
+    for res in (ra, rb):
+        assert np.all(np.asarray(res.prediction) == 0)
+        sums = np.asarray(res.class_sums)
+        assert np.all(sums == sums[:, :1])      # genuinely tied
+
+
+def test_pack_group_formation_rules():
+    """Models group iff they share (n_clauses, n_features, n_states);
+    class count and T/s may differ."""
+    specs = {
+        "a": _tm(seed=17),                       # (7, 9) group 1
+        "b": _tm(seed=18, c=6),                  # (7, 9) group 1
+        "c": _tm(seed=19, m=4),                  # (4, 9) solo
+        "d": _tm(seed=20, f=5),                  # (7, 5) solo
+    }
+    assert pack_key(specs["a"][0]) == pack_key(specs["b"][0])
+    assert pack_key(specs["a"][0]) != pack_key(specs["c"][0])
+
+    async def go():
+        async with TMFleet(dict(specs), ServePolicy(max_batch=4)) as fleet:
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    assert stats["n_groups"] == 1
+    assert stats["groups"][0]["members"] == ["a", "b"]
+    assert stats["groups"][0]["fused_classes"] == 3 + 6
+    assert stats["models"]["a"]["segment"] == [0, 3]
+    assert stats["models"]["b"]["segment"] == [3, 9]
+    assert not stats["models"]["c"]["packed"]
+    assert not stats["models"]["d"]["packed"]
+
+
+def test_per_client_order_preserved_per_model():
+    """Sequentially-awaiting clients of different models interleave
+    freely, but each (model, client) stream completes in order and
+    exactly once."""
+    models = {"a": _tm(seed=21), "b": _tm(seed=22)}
+    completions = []
+
+    async def client(fleet, name, cid, n_reqs, rng):
+        cfg = models[name][0]
+        for i in range(n_reqs):
+            lits = rng.integers(0, 2, (int(rng.integers(1, 4)),
+                                       cfg.n_literals), dtype=np.int8)
+            await fleet.submit(name, lits, client=cid)
+            completions.append((name, cid, i))
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=8,
+                                       max_wait_us=300)) as fleet:
+            rngs = [np.random.default_rng(30 + i) for i in range(4)]
+            await asyncio.gather(
+                client(fleet, "a", 0, 6, rngs[0]),
+                client(fleet, "a", 1, 6, rngs[1]),
+                client(fleet, "b", 0, 6, rngs[2]),
+                client(fleet, "b", 1, 6, rngs[3]))
+
+    asyncio.run(go())
+    assert len(completions) == len(set(completions)) == 24
+    for name in ("a", "b"):
+        for cid in (0, 1):
+            seqs = [i for n, c, i in completions if (n, c) == (name, cid)]
+            assert seqs == sorted(seqs)
+
+
+# -- publishes, version pins, shed tiers ------------------------------
+
+
+def test_sibling_unaffected_by_update():
+    """A's online updates never perturb B's responses (same pack
+    group), and A's own responses change exactly when its version
+    does."""
+    models = {"a": _tm(seed=23), "b": _tm(seed=24, density=0.4)}
+    rng = np.random.default_rng(25)
+    lits = rng.integers(0, 2, (4, models["a"][0].n_literals), dtype=np.int8)
+    labels = rng.integers(0, C, 4).astype(np.int32)
+
+    async def go():
+        specs = {"a": {"cfg": models["a"][0], "state": models["a"][1],
+                       "train_backend": "fused"},
+                 "b": (models["b"][0], models["b"][1])}
+        async with TMFleet(specs, ServePolicy(max_batch=8)) as fleet:
+            b_before = await fleet.submit("b", lits)
+            a_before = await fleet.submit("a", lits)
+            for _ in range(3):
+                await fleet.submit_labeled("a", lits, labels)
+            b_after = await fleet.submit("b", lits)
+            a_after = await fleet.submit("a", lits)
+            stats = fleet.stats()
+        return b_before, b_after, a_before, a_after, stats
+
+    b0, b1, a0, a1, stats = asyncio.run(go())
+    np.testing.assert_array_equal(np.asarray(b0.class_sums),
+                                  np.asarray(b1.class_sums))
+    assert stats["models"]["a"]["version"] == 3
+    assert stats["models"]["b"]["version"] == 0
+    # a's state genuinely moved (3 reinforced updates on 2F=18 literals)
+    assert not np.array_equal(np.asarray(a0.class_sums),
+                              np.asarray(a1.class_sums))
+
+
+def test_shed_tier_packed_isolation():
+    """Cascade shed tier, exact sums pinned on both sides: the
+    isolation contract holds even when every batch routes to the shed
+    tier (shed_qdepth=0)."""
+    models = {"a": _tm(seed=26), "b": _tm(seed=27)}
+    policy = ServePolicy(max_batch=8, shed_backend="cascade",
+                         shed_qdepth=0,      # shed *every* batch
+                         shed_opts={"exact_sums": True})
+    trace = _trace(models, 10, seed=28)
+    stats = _isolation_check(
+        models, {k: v for k, v in models.items()}, policy, trace)
+    assert stats["groups"][0]["requests"] > 0
+
+
+def test_shed_tier_default_opts_packed_predictions_exact():
+    """Default cascade opts (exact_sums=False fleet-wide): the group is
+    still forced exact, so packed members' predictions AND class sums
+    match the oracle even though a solo server's shed sums would be
+    truncated."""
+    models = {"a": _tm(seed=60), "b": _tm(seed=61, c=4, density=0.35)}
+    rng = np.random.default_rng(62)
+    lits = rng.integers(0, 2, (5, models["a"][0].n_literals), dtype=np.int8)
+
+    async def go():
+        policy = ServePolicy(max_batch=8, shed_backend="cascade",
+                             shed_qdepth=0)
+        async with TMFleet({k: v for k, v in models.items()},
+                           policy) as fleet:
+            return (await fleet.submit("a", lits),
+                    await fleet.submit("b", lits))
+
+    ra, rb = asyncio.run(go())
+    for name, res in (("a", ra), ("b", rb)):
+        cfg, state = models[name]
+        ref = get_engine("oracle", cfg, state).infer(jnp.asarray(lits))
+        np.testing.assert_array_equal(np.asarray(res.prediction),
+                                      np.asarray(ref.prediction))
+        np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                      np.asarray(ref.class_sums))
+
+
+def test_group_policy_forces_exact_sums():
+    """_group_policy flips a cascade shed tier to exact_sums=True and
+    leaves everything else (and non-cascade tiers) alone."""
+    p = ServePolicy(shed_backend="cascade", shed_qdepth=2)
+    assert p.resolved_shed_opts() == {"exact_sums": False}
+    gp = _group_policy(p)
+    assert gp.resolved_shed_opts()["exact_sums"] is True
+    assert gp.shed_qdepth == 2 and gp.max_batch == p.max_batch
+    p2 = ServePolicy(shed_backend="oracle")
+    assert _group_policy(p2) is p2
+    assert _group_policy(ServePolicy()) is not None
+
+
+def test_deadline_rejects_counted_per_model():
+    """Admission control flows through the fleet: an unmeetable
+    deadline raises DeadlineExceeded and lands in that model's reject
+    counter, not its error counter."""
+    cfg, state = _tm(seed=29)
+
+    async def go():
+        async with TMFleet({"a": (cfg, state), "b": _tm(seed=30)},
+                           ServePolicy(max_batch=4)) as fleet:
+            lits = np.ones((2, cfg.n_literals), np.int8)
+            for _ in range(3):       # establish a service-time floor
+                await fleet.submit("a", lits)
+            with pytest.raises(DeadlineExceeded):
+                await fleet.submit("a", lits, deadline_us=1)
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    assert stats["models"]["a"]["rejects"] == 1
+    assert stats["models"]["a"]["errors"] == 0
+    assert stats["models"]["b"]["rejects"] == 0
+
+
+# -- per-model lifecycle through the fleet ----------------------------
+
+
+@pytest.mark.slow
+def test_checkpoint_restore_bitexact_through_fleet(tmp_path):
+    """Kill/restore one fleet member mid-trace: the restored fleet's
+    remaining trace is bit-exact vs an uninterrupted solo run (PR 5
+    lifecycle reused verbatim, per model), and the pack group serves
+    the restored state."""
+    models = {"a": _tm(seed=31), "b": _tm(seed=32)}
+    cfg_a, s_a = models["a"]
+    rng = np.random.default_rng(33)
+    batches = [(rng.integers(0, 2, (3, cfg_a.n_literals), dtype=np.int8),
+                rng.integers(0, C, 3).astype(np.int32)) for _ in range(6)]
+    probe = rng.integers(0, 2, (2, cfg_a.n_literals), dtype=np.int8)
+    spec = {"cfg": cfg_a, "state": s_a, "train_backend": "fused",
+            "checkpoint_dir": str(tmp_path / "a")}
+
+    def fleet_specs():
+        return {"a": dict(spec), "b": models["b"]}
+
+    async def phase1():
+        async with TMFleet(fleet_specs(), ServePolicy(max_batch=4)) as fl:
+            for lits, labels in batches[:3]:
+                await fl.submit_labeled("a", lits, labels)
+            fl.checkpoint("a")
+
+    async def phase2():
+        fl = TMFleet(fleet_specs(), ServePolicy(max_batch=4))
+        assert fl.restore("a") == 3
+        out = []
+        async with fl:
+            for lits, labels in batches[3:]:
+                await fl.submit_labeled("a", lits, labels)
+            out.append(np.asarray((await fl.submit("a", probe)).class_sums))
+            out.append(np.asarray((await fl.submit("b", probe)).class_sums))
+        return out
+
+    asyncio.run(phase1())
+    got_a, got_b = asyncio.run(phase2())
+
+    async def uninterrupted():
+        async with TMServer(cfg_a, s_a, ServePolicy(max_batch=4),
+                            train_backend="fused") as srv:
+            for lits, labels in batches:
+                await srv.submit_labeled(lits, labels)
+            return np.asarray((await srv.submit(probe)).class_sums)
+
+    np.testing.assert_array_equal(got_a, asyncio.run(uninterrupted()))
+    ref_b = get_engine("oracle", models["b"][0],
+                       models["b"][1]).infer(jnp.asarray(probe))
+    np.testing.assert_array_equal(got_b, np.asarray(ref_b.class_sums))
+
+
+def test_rollback_per_model_in_trace():
+    """Rollback of one packed member mid-trace matches the solo replay
+    with the rollback at the same position; the sibling never moves."""
+    models = {"a": _tm(seed=34), "b": _tm(seed=35)}
+    cfg, _ = models["a"]
+    rng = np.random.default_rng(36)
+    lits = rng.integers(0, 2, (3, cfg.n_literals), dtype=np.int8)
+    labels = rng.integers(0, C, 3).astype(np.int32)
+    trace = [("a", "predict", lits), ("b", "predict", lits),
+             ("a", "update", lits, labels), ("a", "update", lits, labels),
+             ("a", "predict", lits), ("a", "rollback", 0),
+             ("a", "predict", lits), ("b", "predict", lits)]
+    specs = {"a": {"cfg": cfg, "state": models["a"][1],
+                   "train_backend": "fused"},
+             "b": models["b"]}
+    _isolation_check(models, specs, ServePolicy(max_batch=4), trace,
+                     server_kw={"a": {"train_backend": "fused"}})
+
+
+# -- weighted engine cache under a fleet budget -----------------------
+
+
+@pytest.fixture
+def fresh_cache():
+    """Reset the process-wide engine cache + budget around a test."""
+    clear_engine_cache()
+    set_engine_cache_budget(ENGINE_CACHE_SIZE, 0)
+    yield
+    clear_engine_cache()
+    set_engine_cache_budget(ENGINE_CACHE_SIZE, 0)
+
+
+def _states(n, seed=0):
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=3)
+    rng = np.random.default_rng(seed)
+    return cfg, [TMState(ta=jnp.asarray(
+        np.where(rng.random((2, 4, 6)) < 0.3, cfg.n_states + 1,
+                 cfg.n_states), jnp.int32)) for _ in range(n)]
+
+
+def test_weighted_eviction_hot_model_survives():
+    """Entry budget 2, weights 5.0 / 0.1 / 1.0: the light entry falls
+    out first even though it was touched most recently."""
+    cache = KeyedEngineCache(maxsize=2)
+    cfg, states = _states(3, seed=40)
+    for i, (s, w) in enumerate(zip(states, (5.0, 0.1, 1.0))):
+        cache.set_state_weight(s, w)
+    cache.insert("hot", states[0], "e0")
+    cache.insert("cold", states[1], "e1")
+    cache.insert("warm", states[2], "e2")     # evicts "cold", not "hot"
+    assert cache.get("hot") == "e0"
+    assert cache.get("warm") == "e2"
+    assert cache.get("cold") is None
+    assert cache.info()["evictions"] == 1
+
+
+def test_weighted_eviction_equal_weights_is_lru():
+    """No weights registered → the old pure-LRU behavior exactly."""
+    cache = KeyedEngineCache(maxsize=2)
+    cfg, states = _states(3, seed=41)
+    cache.insert("k0", states[0], "e0")
+    cache.insert("k1", states[1], "e1")
+    assert cache.get("k0") == "e0"            # refresh k0: k1 is now LRU
+    cache.insert("k2", states[2], "e2")
+    assert cache.get("k1") is None
+    assert cache.get("k0") == "e0" and cache.get("k2") == "e2"
+
+
+def test_byte_budget_evicts_to_fit():
+    """max_bytes below two states' footprint keeps exactly the heavy-
+    weight entry; info() reconciles bytes with survivors."""
+    cfg, states = _states(2, seed=42)
+    per = state_nbytes(states[0])
+    cache = KeyedEngineCache(maxsize=8, max_bytes=int(per * 1.5))
+    cache.set_state_weight(states[0], 0.1)
+    cache.set_state_weight(states[1], 9.0)
+    cache.insert("light", states[0], "e0")
+    cache.insert("heavy", states[1], "e1")
+    info = cache.info()
+    assert info["size"] == 1 and info["bytes"] == per
+    assert cache.get("heavy") == "e1"
+
+
+def test_replacement_accounting_no_drift():
+    """The PR 8 drift bug: replacing an existing key (duplicate-build
+    race) must count the displaced entry, keeping
+    ``misses == size + evictions + superseded``."""
+    cfg, states = _states(1, seed=43)
+    cache = KeyedEngineCache(maxsize=4)
+    cache.insert("k", states[0], "first")
+    cache.insert("k", states[0], "second")    # the racing twin
+    info = cache.info()
+    assert cache.get("k") == "second"
+    assert info["misses"] == 2 and info["size"] == 1
+    assert info["evictions"] == 1
+    assert info["misses"] == (info["size"] + info["evictions"]
+                              + info["superseded"])
+
+
+def test_counter_reconciliation_identity():
+    """Mixed insert / capacity-evict / supersede / replace sequence:
+    the reconciliation identity holds at every step."""
+    cfg, states = _states(6, seed=44)
+    cache = KeyedEngineCache(maxsize=3)
+
+    def check():
+        info = cache.info()
+        assert info["misses"] == (info["size"] + info["evictions"]
+                                  + info["superseded"]), info
+
+    for i, s in enumerate(states[:4]):
+        cache.insert(f"k{i}", s, f"e{i}")     # 4th insert LRU-evicts
+        check()
+    cache.evict_state(states[2])              # superseded
+    check()
+    cache.insert("k3", states[3], "e3b")      # replacement
+    check()
+    cache.insert("k4", states[4], "e4")
+    cache.insert("k5", states[5], "e5")
+    check()
+
+
+def test_set_budget_shrink_evicts(fresh_cache):
+    """Shrinking the process budget evicts immediately, lightest
+    first; growing it back never resurrects."""
+    cfg, states = _states(4, seed=45)
+    for i, s in enumerate(states):
+        weight_engines_for_state(s, 10.0 if i == 0 else 0.5)
+        get_engine("oracle", cfg, s)
+    assert engine_cache_info()["size"] == 4
+    info = set_engine_cache_budget(max_entries=2)
+    assert info["size"] == 2
+    # the heavy state's engine survived the shrink
+    assert get_engine("oracle", cfg, states[0]) is not None
+    hits_before = engine_cache_info()["hits"]
+    get_engine("oracle", cfg, states[0])
+    assert engine_cache_info()["hits"] == hits_before + 1
+
+
+def test_fleet_budget_and_static_weights(fresh_cache):
+    """A fleet constructed with cache budget + static weights applies
+    both: info() reflects the budget, stats() reports the pinned
+    weights, and weights are registered for the served states."""
+    models = {"hot": _tm(seed=46), "cold": _tm(seed=47, m=4)}
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=4),
+                           cache_entries=6,
+                           weights={"hot": 8.0, "cold": 0.25}) as fleet:
+            lits = np.ones((2, models["hot"][0].n_literals), np.int8)
+            await fleet.submit("hot", lits)
+            lits_c = np.ones((2, models["cold"][0].n_literals), np.int8)
+            await fleet.submit("cold", lits_c)
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    assert stats["engine_cache"]["maxsize"] == 6
+    assert stats["models"]["hot"]["weight"] == 8.0
+    assert stats["models"]["cold"]["weight"] == 0.25
+    assert stats["engine_cache"]["weights"] > 0
+
+
+def test_popularity_weight_tracks_requests(fresh_cache):
+    """Without static weights, the measured request share drives the
+    weight: the hammered model ends up strictly heavier."""
+    models = {"hot": _tm(seed=48), "cold": _tm(seed=49, m=4)}
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=8)) as fleet:
+            lits = np.ones((1, models["hot"][0].n_literals), np.int8)
+            for _ in range(64):
+                await fleet.submit("hot", lits)
+            lits_c = np.ones((1, models["cold"][0].n_literals), np.int8)
+            await fleet.submit("cold", lits_c)
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    assert (stats["models"]["hot"]["weight"]
+            > stats["models"]["cold"]["weight"])
+    assert stats["models"]["hot"]["requests"] == 64
+
+
+# -- fleet lifecycle: add / drain / errors ----------------------------
+
+
+def test_add_model_to_running_fleet():
+    """add_model on a live fleet serves immediately (solo), and the
+    contract holds for it."""
+    models = {"a": _tm(seed=50)}
+    new_cfg, new_state = _tm(seed=51, c=4)
+
+    async def go():
+        async with TMFleet({"a": models["a"]},
+                           ServePolicy(max_batch=4)) as fleet:
+            await fleet.add_model("late", (new_cfg, new_state))
+            lits = np.ones((3, new_cfg.n_literals), np.int8)
+            res = await fleet.submit("late", lits)
+            stats = fleet.stats()
+        return res, stats
+
+    res, stats = asyncio.run(go())
+    ref = get_engine("oracle", new_cfg, new_state).infer(
+        jnp.ones((3, new_cfg.n_literals), jnp.int8))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
+    assert stats["n_models"] == 2
+    assert stats["models"]["late"]["packed"] is False
+
+
+def test_drain_solo_model():
+    """Draining removes the model (submit → KeyError) while siblings
+    keep serving."""
+    models = {"a": _tm(seed=52), "b": _tm(seed=53, m=4)}
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=4)) as fleet:
+            await fleet.drain("b")
+            with pytest.raises(KeyError):
+                await fleet.submit("b", np.ones(
+                    (1, models["b"][0].n_literals), np.int8))
+            res = await fleet.submit(
+                "a", np.ones((2, models["a"][0].n_literals), np.int8))
+            return res, fleet.stats()
+
+    res, stats = asyncio.run(go())
+    assert stats["n_models"] == 1
+    assert np.asarray(res.prediction).shape == (2,)
+
+
+def test_drain_packed_member_resegments():
+    """Draining one pack-group member shifts the survivor to columns
+    [0, C) and its responses stay bit-exact vs solo."""
+    models = {"a": _tm(seed=54), "b": _tm(seed=55, c=5, density=0.35)}
+    rng = np.random.default_rng(56)
+    lits = rng.integers(0, 2, (4, models["b"][0].n_literals), dtype=np.int8)
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=8)) as fleet:
+            before = await fleet.submit("b", lits)
+            await fleet.drain("a")
+            after = await fleet.submit("b", lits)
+            return before, after, fleet.stats()
+
+    before, after, stats = asyncio.run(go())
+    ref = get_engine("oracle", models["b"][0],
+                     models["b"][1]).infer(jnp.asarray(lits))
+    for res in (before, after):
+        np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                      np.asarray(ref.class_sums))
+    assert stats["models"]["b"]["segment"] == [0, 5]
+    assert stats["n_models"] == 1
+
+
+def test_unknown_model_and_duplicate_name():
+    """Routing errors are crisp: unknown name → KeyError naming the
+    served set; duplicate add_model → ValueError; drain of an unknown
+    name → KeyError."""
+    cfg, state = _tm(seed=57)
+
+    async def go():
+        async with TMFleet({"a": (cfg, state)},
+                           ServePolicy(max_batch=2)) as fleet:
+            with pytest.raises(KeyError, match="unknown model"):
+                await fleet.submit("nope", np.ones((1, cfg.n_literals),
+                                                   np.int8))
+            with pytest.raises(ValueError, match="duplicate"):
+                await fleet.add_model("a", (cfg, state))
+            with pytest.raises(KeyError, match="unknown model"):
+                await fleet.drain("nope")
+
+    asyncio.run(go())
+
+
+def test_empty_fleet_rejected():
+    """A fleet with no models is a construction error, not a latent
+    KeyError at first submit."""
+    with pytest.raises(ValueError, match="at least one model"):
+        TMFleet({})
+
+
+def test_stats_structure():
+    """The observability contract: fleet-level keys, per-model summary
+    keys, group rows, and the nested full server stats exist."""
+    models = {"a": _tm(seed=58), "b": _tm(seed=59)}
+
+    async def go():
+        async with TMFleet({k: v for k, v in models.items()},
+                           ServePolicy(max_batch=4)) as fleet:
+            await fleet.submit("a", np.ones((1, models["a"][0].n_literals),
+                                            np.int8))
+            return fleet.stats()
+
+    stats = asyncio.run(go())
+    for key in ("n_models", "n_groups", "packed_models", "models",
+                "groups", "engine_cache"):
+        assert key in stats, key
+    a = stats["models"]["a"]
+    for key in ("requests", "errors", "rejects", "p50_ms", "p99_ms",
+                "packed", "group", "segment", "version", "updates",
+                "weight", "state_nbytes", "server"):
+        assert key in a, key
+    assert a["server"]["state_version"] == a["version"]
+    g = stats["groups"][0]
+    for key in ("members", "fused_classes", "shape", "requests",
+                "mean_batch_rows"):
+        assert key in g, key
+    for key in ("size", "maxsize", "bytes", "max_bytes", "weights",
+                "hits", "misses", "evictions", "superseded"):
+        assert key in stats["engine_cache"], key
