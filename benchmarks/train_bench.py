@@ -10,9 +10,22 @@ shape) cell, fed to ``scripts/check_perf.py`` against
     PYTHONPATH=src python -m benchmarks.train_bench --quick
     PYTHONPATH=src python -m benchmarks.train_bench --out BENCH_train.json
     PYTHONPATH=src python -m benchmarks.train_bench --sparse --quick
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.train_bench --sharded --quick
 
 ``--quick`` runs the bench shape only and additionally asserts the
 acceptance bar: the ``fused`` backend ≥ 2× the ``reference`` step time.
+
+``--sharded`` sweeps the data-parallel ``sharded`` backend over mesh
+sizes D ∈ {1, 2, 4, 8} (``kind: "train_sharded"`` rows, one per D),
+timing each against the single-host ``fused`` step on the same state
+and asserting bitwise delta parity per cell.  On a single-accelerator
+host the mesh is simulated (set ``XLA_FLAGS`` as above *before* the
+run); D values the host can't build are skipped.  With ``--quick`` the
+sweep asserts the overhead bar: the D=4 step within 1.3× the D=1 step
+— the shard seam (global draws + psum) must stay a near-free wrapper,
+since on real multi-host hardware the per-device batch shrinks by D
+while the simulated single-CPU run still executes all shards serially.
 
 ``--sparse`` switches to the clause-indexed matrix instead: a
 density × ``k_slack`` sweep of the ``sparse`` backend (``kind:
@@ -72,6 +85,12 @@ SPARSE_K_SLACKS = (0, 8, 32)
 SPARSE_BAR_DENSITY = 0.05   # the trained-machine regime the bar is set in
 SPARSE_BAR_K_SLACK = 8      # the backend default
 MIN_SPARSE_SPEEDUP = 1.5
+
+# sharded matrix: data-parallel mesh sizes on the bench shape; the
+# --quick gate bounds the D=4 step against D=1 (shard-seam overhead)
+SHARDED_DEVICES = (1, 2, 4, 8)
+SHARDED_GATE_D = 4
+MAX_SHARDED_SLOWDOWN = 1.3
 
 
 def _state_at_density(cfg: TMConfig, rng: np.random.Generator,
@@ -198,6 +217,71 @@ def sparse_sweep(*, quick: bool = False, prng: str = "rbg",
     return cells
 
 
+def sharded_sweep(*, quick: bool = False, prng: str = "rbg",
+                  repeat: int = 5) -> list[dict]:
+    """Mesh-size matrix for the ``sharded`` backend (bench shape).
+
+    One ``kind: "train_sharded"`` row per device count D, each timed
+    round-robin against the single-host ``fused`` step on the same
+    state (``fused_step_us`` / ``slowdown_vs_fused``) and
+    parity-checked bitwise against it — the sharded contract.  D values
+    exceeding this host's (possibly simulated) device count are skipped
+    with a note on stderr, never silently benched at a smaller mesh.
+    """
+    c, m, b = BENCH_SHAPE["C"], BENCH_SHAPE["M"], BENCH_SHAPE["B"]
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=F_FEATURES)
+    rng = np.random.default_rng(0)
+    st = _random_state(cfg, rng)
+    lits = jnp.asarray(rng.integers(0, 2, (b, cfg.n_literals),
+                                    dtype=np.int8))
+    y = jnp.asarray(rng.integers(0, c, (b,), dtype=np.int32))
+    key = jax.random.key(0, impl=prng)
+    avail = len(jax.devices())
+    ds = tuple(d for d in SHARDED_DEVICES if d <= avail)
+    if len(ds) < len(SHARDED_DEVICES):
+        skipped = [d for d in SHARDED_DEVICES if d > avail]
+        print(f"sharded: host has {avail} device(s); skipping D={skipped} "
+              f"(set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              f"before the run to simulate the full mesh)",
+              file=sys.stderr)
+    engines, builds = {}, {}
+    for name in ("fused",) + ds:
+        t0 = time.perf_counter()
+        engines[name] = (get_train_engine("fused", cfg, cache=False)
+                         if name == "fused" else
+                         get_train_engine("sharded", cfg, cache=False,
+                                          n_devices=name))
+        builds[name] = (time.perf_counter() - t0) * 1e3
+    times = _time_round_robin(engines, st, key, lits, y, repeat=repeat)
+    ref = engines["fused"].step(st, key, lits, y)
+    cells: list[dict] = []
+    for d in ds:
+        got = engines[d].step(st, key, lits, y)
+        parity = bool((np.asarray(got.ta) == np.asarray(ref.ta)).all())
+        us = times[d]
+        cells.append({
+            "kind": "train_sharded", "backend": "sharded", "D": d,
+            "C": c, "M": m, "B": b, "F": F_FEATURES, "prng": prng,
+            "build_ms": round(builds[d], 3),
+            "step_us": round(us, 1),
+            "fused_step_us": round(times["fused"], 1),
+            "slowdown_vs_fused": round(us / times["fused"], 3),
+            "rows_per_s": round(b / (us * 1e-6), 1),
+            "delta_parity": parity,
+        })
+    return cells
+
+
+def sharded_slowdown(cells: list[dict]) -> float:
+    """The gate ratio: the D=4 step time over the D=1 step time."""
+    by_d = {c["D"]: c for c in cells if c["kind"] == "train_sharded"}
+    if 1 not in by_d or SHARDED_GATE_D not in by_d:
+        raise SystemExit(
+            f"FAIL: sharded gate needs D=1 and D={SHARDED_GATE_D} cells; "
+            f"got D={sorted(by_d)} (too few devices — set XLA_FLAGS)")
+    return by_d[SHARDED_GATE_D]["step_us"] / by_d[1]["step_us"]
+
+
 def sparse_speedup(cells: list[dict]) -> float:
     """The bar cell's ratio: 5 % density, default slack, vs reference."""
     bar = next(c for c in cells
@@ -236,6 +320,11 @@ def main() -> None:
                     help="run the density × k_slack sparse matrix instead "
                          "of the backend grid (--quick: 5%% cells + "
                          "assert the ≥1.5x sparse bar)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the mesh-size matrix of the sharded backend "
+                         "instead of the backend grid (--quick: also "
+                         "assert the D=4 ≤ 1.3× D=1 overhead bar; "
+                         "simulate devices with XLA_FLAGS)")
     ap.add_argument("--backends", nargs="*", default=None,
                     help="subset of backends (default: all registered)")
     ap.add_argument("--prng", default="rbg",
@@ -249,7 +338,12 @@ def main() -> None:
                     help="fused-vs-reference bar that --quick must reach")
     args = ap.parse_args()
 
-    if args.sparse:
+    if args.sparse and args.sharded:
+        sys.exit("--sparse and --sharded are mutually exclusive")
+    if args.sharded:
+        cells = sharded_sweep(quick=args.quick, prng=args.prng,
+                              repeat=args.repeat)
+    elif args.sparse:
         cells = sparse_sweep(quick=args.quick, prng=args.prng,
                              repeat=args.repeat)
     else:
@@ -266,6 +360,17 @@ def main() -> None:
     if any(not c["delta_parity"] for c in cells):
         sys.exit("FAIL: a training backend diverged from the reference "
                  "deltas")
+    if args.sharded and args.quick:
+        ratio = sharded_slowdown(cells)
+        print(f"sharded D={SHARDED_GATE_D} vs D=1 on the bench shape: "
+              f"{ratio:.2f}x step time (bar <= "
+              f"{MAX_SHARDED_SLOWDOWN:.1f}x); delta parity vs fused "
+              f"asserted on every cell", file=sys.stderr)
+        if ratio > MAX_SHARDED_SLOWDOWN:
+            sys.exit(f"FAIL: sharded D={SHARDED_GATE_D} step "
+                     f"{ratio:.2f}x D=1 > {MAX_SHARDED_SLOWDOWN:.1f}x "
+                     f"overhead bar")
+        return
     if args.sparse and args.quick:
         ratio = sparse_speedup(cells)
         print(f"sparse vs reference at {SPARSE_BAR_DENSITY:.0%} density: "

@@ -36,13 +36,18 @@ Handles three row kinds in any of the given files:
   better), baseline ``benchmarks/baseline_train.json``.  Sparse matrix
   rows (``kind="train_sparse"``, from ``--sparse`` — the density ×
   k_slack sweep) live in the same baseline, keyed by (kind, density,
-  k_slack, C, M, B) with the same metric.
+  k_slack, C, M, B) with the same metric.  Sharded sweep rows
+  (``kind="train_sharded"``, from ``--sharded`` — the simulated-mesh
+  device-count sweep) also live there, keyed by (kind, D, C, M, B)
+  with the same metric (the bench's own 1.3× D=4-vs-D=1 overhead gate
+  is blocking; this diff just tracks drift per device count).
 
     PYTHONPATH=src python -m benchmarks.engine_bench --quick --out BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.serve_bench --quick --out BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.train_bench --quick --out BENCH_train.json
     PYTHONPATH=src python -m benchmarks.train_bench --sparse --quick --out BENCH_train_sparse.json
-    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json BENCH_train.json BENCH_train_sparse.json
+    PYTHONPATH=src python -m benchmarks.train_bench --sharded --quick --out BENCH_train_sharded.json
+    python scripts/check_perf.py BENCH_engine.json BENCH_serve.json BENCH_train.json BENCH_train_sparse.json BENCH_train_sharded.json
 
 Always exits 0: timing on shared runners is advisory, never a merge
 blocker.
@@ -92,6 +97,9 @@ def row_key_metric(cell: dict) -> tuple[tuple, str, str]:
     if kind == "train_sparse":
         return ((kind, cell["density"], cell["k_slack"],
                  cell["C"], cell["M"], cell["B"]),
+                "step_us", "train")
+    if kind == "train_sharded":
+        return ((kind, cell["D"], cell["C"], cell["M"], cell["B"]),
                 "step_us", "train")
     return ((cell["backend"], cell["C"], cell["M"], cell["B"]),
             "infer_us", "engine")

@@ -30,6 +30,7 @@ from __future__ import annotations
 import os
 import shutil
 import threading
+import time
 
 import jax
 import msgpack
@@ -37,7 +38,7 @@ import numpy as np
 
 __all__ = ["save", "save_async", "restore", "latest_step", "valid_steps",
            "gc_keep", "read_manifest_extra", "tm_lifecycle_tree",
-           "restore_tm_lifecycle"]
+           "restore_tm_lifecycle", "wait_for_complete"]
 
 _MAX_SHARD_BYTES = 1 << 30
 
@@ -255,7 +256,8 @@ def tm_lifecycle_tree(ta, cursor=None) -> dict:
     return tree
 
 
-def restore_tm_lifecycle(directory: str, step: int | None = None
+def restore_tm_lifecycle(directory: str, step: int | None = None, *,
+                         shardings: dict | None = None
                          ) -> tuple[int, dict, dict]:
     """Load one lifecycle snapshot → ``(step, tree, extra)``.
 
@@ -263,8 +265,12 @@ def restore_tm_lifecycle(directory: str, step: int | None = None
     :func:`tm_lifecycle_tree` (``cursor`` present iff the snapshot
     recorded one); ``extra`` is the manifest metadata (version, cfg
     fields, train backend + opts, key impl — see
-    ``TMServer.checkpoint``).  Raises ``FileNotFoundError`` when the
-    directory holds no valid checkpoint.
+    ``TMServer.checkpoint``).  ``shardings=`` is a (possibly partial)
+    tree of NamedShardings for the *restoring* mesh, forwarded to
+    :func:`restore` — the elastic seam: snapshots are host-gathered, so
+    a checkpoint written on mesh A re-``device_put``s onto mesh B here.
+    Raises ``FileNotFoundError`` when the directory holds no valid
+    checkpoint.
     """
     if step is None:
         step = latest_step(directory)
@@ -273,5 +279,34 @@ def restore_tm_lifecycle(directory: str, step: int | None = None
                 f"no valid checkpoint (step_*/.complete) under {directory}")
     extra = read_manifest_extra(directory, step)
     like = tm_lifecycle_tree(0, 0 if extra.get("has_cursor") else None)
-    tree, extra = restore(directory, step, like)
+    sh = None
+    if shardings:
+        sh = {k: shardings.get(k) for k in like}
+    tree, extra = restore(directory, step, like, shardings=sh)
     return step, tree, extra
+
+
+def wait_for_complete(directory: str, step: int | None = None, *,
+                      timeout: float = 30.0, poll: float = 0.05) -> int:
+    """Block until a valid checkpoint exists → its step number.
+
+    The follower half of the multi-process leader-writes/followers-read
+    discipline (docs/operations.md): the leader's :func:`save` is atomic
+    (tmp-dir + rename, ``.complete`` last), so a follower that restores
+    concurrently with a write simply polls until a ``.complete`` marker
+    lands instead of reading a torn snapshot.  ``step=None`` waits for
+    *any* valid step (→ the newest); an explicit ``step`` waits for that
+    one.  Raises ``TimeoutError`` after ``timeout`` seconds.
+    """
+    deadline = time.monotonic() + timeout
+    while True:
+        steps = valid_steps(directory)
+        if step is None and steps:
+            return steps[-1]
+        if step is not None and step in steps:
+            return step
+        if time.monotonic() >= deadline:
+            raise TimeoutError(
+                f"no valid checkpoint{'' if step is None else f' step_{step}'}"
+                f" under {directory} after {timeout}s")
+        time.sleep(poll)

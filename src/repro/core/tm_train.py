@@ -24,9 +24,10 @@ provides interchangeable ``TrainEngine`` backends (bit-packed SWAR clause
 eval, a fused Pallas delta kernel) that are delta-exact with it for the
 same PRNG key.  The PRNG contract that makes them exchangeable lives in
 :func:`feedback_masks` / :func:`feedback_update`: every backend splits the
-step key identically and draws uniforms of identical shapes, so the
-sampled feedback decisions are bitwise identical no matter which layout
-evaluated the clauses.
+step key identically, derives the same per-row threefry keys, and draws
+each row's uniforms from that row's key alone, so the sampled feedback
+decisions are bitwise identical no matter which layout evaluated the
+clauses — or how the batch was sharded across devices.
 """
 
 from __future__ import annotations
@@ -38,19 +39,20 @@ import jax.numpy as jnp
 
 from .tm import TMConfig, TMState, class_sums, clause_outputs, clause_polarity
 
-__all__ = ["feedback_masks", "feedback_update", "train_step", "train_epoch",
-           "evaluate"]
+__all__ = ["feedback_draws", "feedback_thresholds", "feedback_masks",
+           "feedback_update", "train_step", "train_epoch", "evaluate"]
 
 
-def _type_i_delta(key: jax.Array, clause: jax.Array, literals: jax.Array,
+def _type_i_delta(keys: jax.Array, clause: jax.Array, literals: jax.Array,
                   s: float, boost_tpf: bool) -> jax.Array:
     """Type I feedback delta for one class block.
 
+    keys: (B,) per-row threefry keys (see :func:`feedback_draws`);
     clause: (B, M) {0,1}; literals: (B, 2F) {0,1} → delta (B, M, 2F) int32.
     """
     b, m = clause.shape
     f2 = literals.shape[-1]
-    u = jax.random.uniform(key, (b, m, f2))
+    u = jax.vmap(lambda k: jax.random.uniform(k, (m, f2)))(keys)
     lit = literals[:, None, :]                      # (B, 1, 2F)
     cl = clause[:, :, None]                         # (B, M, 1)
     p_inc = 1.0 if boost_tpf else (s - 1.0) / s
@@ -69,40 +71,77 @@ def _type_ii_delta(clause: jax.Array, literals: jax.Array,
     return ((cl == 1) & (lit == 0) & (inc == 0)).astype(jnp.int32)
 
 
+def feedback_draws(cfg: TMConfig, key: jax.Array, batch: int) -> tuple:
+    """The votes-*independent* half of the PRNG contract.
+
+    Draws every random quantity of one training step at the **global**
+    batch shape: ``(offs, u, k1s, k2s)`` where ``offs`` (B,) is the
+    negative-class offset (1..C−1), ``u`` (B, 2, M) the feedback
+    activation uniforms, and ``k1s``/``k2s`` (B,) are *per-row* threefry
+    keys for the target/negative Type I draws — row ``i``'s (M, 2F)
+    uniforms come from ``k1s[i]``/``k2s[i]`` and nothing else.
+
+    Per-row keys are what make data-parallel sharding exact: a bulk
+    (B, M, 2F) draw from one key has no prefix property (a shard could
+    never re-create its slice locally), but a per-row draw is trivially
+    sharding-invariant — each shard derives its rows' words from its
+    rows' keys, bit-identical to the single-host draw.  The row keys are
+    always **threefry** regardless of the step key's impl: they are
+    wrapped from a (2, B, 2) uint32 ``bits`` draw on the step chain, so
+    an ``rbg`` step chain still yields deterministic, vmap- and
+    shard_map-stable row draws (raw ``rbg`` generation is *not* stable
+    across sharding, which is why it is never used for the row words).
+    """
+    k_neg, k_fb, k_i = jax.random.split(key, 3)
+    offs = jax.random.randint(k_neg, (batch,), 1, cfg.n_classes)
+    u = jax.random.uniform(k_fb, (batch, 2, cfg.n_clauses))
+    w = jax.random.bits(k_i, (2, batch, 2), jnp.uint32)
+    k1s = jax.random.wrap_key_data(w[0], impl="threefry2x32")
+    k2s = jax.random.wrap_key_data(w[1], impl="threefry2x32")
+    return offs, u, k1s, k2s
+
+
+def feedback_thresholds(cfg: TMConfig, votes: jax.Array, y: jax.Array,
+                        offs: jax.Array, u: jax.Array) -> tuple:
+    """The votes-*dependent* half: threshold the pre-drawn uniforms.
+
+    Row-local (no cross-batch reduction), so it can run per shard on row
+    slices of ``offs``/``u`` and still match the single-host masks
+    bitwise.  Padding contract: a row with ``u = 2.0`` (> any
+    probability, which live in [0, 1]) yields all-False masks and
+    therefore zero deltas downstream.
+    """
+    b = y.shape[0]
+    v = jnp.clip(votes, -cfg.T, cfg.T).astype(jnp.float32)
+    y_neg = (y + offs) % cfg.n_classes
+    p_target = (cfg.T - v[jnp.arange(b), y]) / (2.0 * cfg.T)          # (B,)
+    p_neg = (cfg.T + v[jnp.arange(b), y_neg]) / (2.0 * cfg.T)         # (B,)
+    fb_t = u[:, 0] < p_target[:, None]                                 # (B, M)
+    fb_n = u[:, 1] < p_neg[:, None]                                    # (B, M)
+    return y_neg, fb_t, fb_n
+
+
 def feedback_masks(cfg: TMConfig, key: jax.Array, votes: jax.Array,
                    y: jax.Array) -> tuple:
     """Sample everything downstream of the class sums — the PRNG contract.
 
     votes: (B, C) int32 class sums; y: (B,) int32 labels →
-    ``(y_neg, fb_t, fb_n, k_i1, k_i2)`` where ``y_neg`` (B,) is the
+    ``(y_neg, fb_t, fb_n, k1s, k2s)`` where ``y_neg`` (B,) is the
     sampled negative class (≠ y), ``fb_t``/``fb_n`` (B, M) bool are the
     per-clause feedback activations of the target/negative class, and
-    ``k_i1``/``k_i2`` are the keys a backend must use for the target/
-    negative Type I uniform draws (shape ``(B, M, 2F)``).
+    ``k1s``/``k2s`` (B,) are the per-row keys a backend must use for the
+    target/negative Type I uniform draws (shape ``(M, 2F)`` per row).
 
     Every ``TrainEngine`` backend calls this with the same key and
     bit-identical votes, so the sampled decisions — and therefore the
-    summed deltas — are bitwise identical across backends.
+    summed deltas — are bitwise identical across backends.  Composed
+    from :func:`feedback_draws` + :func:`feedback_thresholds`; the
+    ``sharded`` backend calls the halves separately (draws at global
+    shape, thresholds per shard) and stays inside the same contract.
     """
-    b = y.shape[0]
-    m = cfg.n_clauses
-    k_neg, k_fb, k_i = jax.random.split(key, 3)
-
-    v = jnp.clip(votes, -cfg.T, cfg.T).astype(jnp.float32)
-
-    # sample a negative class != y per sample
-    offs = jax.random.randint(k_neg, (b,), 1, cfg.n_classes)
-    y_neg = (y + offs) % cfg.n_classes
-
-    # per-(sample, class) feedback activation probability
-    p_target = (cfg.T - v[jnp.arange(b), y]) / (2.0 * cfg.T)          # (B,)
-    p_neg = (cfg.T + v[jnp.arange(b), y_neg]) / (2.0 * cfg.T)         # (B,)
-    u = jax.random.uniform(k_fb, (b, 2, m))
-    fb_t = u[:, 0] < p_target[:, None]                                 # (B, M)
-    fb_n = u[:, 1] < p_neg[:, None]                                    # (B, M)
-
-    k_i1, k_i2 = jax.random.split(k_i)
-    return y_neg, fb_t, fb_n, k_i1, k_i2
+    offs, u, k1s, k2s = feedback_draws(cfg, key, y.shape[0])
+    y_neg, fb_t, fb_n = feedback_thresholds(cfg, votes, y, offs, u)
+    return y_neg, fb_t, fb_n, k1s, k2s
 
 
 def feedback_update(cfg: TMConfig, state: TMState, key: jax.Array,
@@ -119,7 +158,7 @@ def feedback_update(cfg: TMConfig, state: TMState, key: jax.Array,
     """
     b = x_literals.shape[0]
     c = cfg.n_classes
-    y_neg, fb_t, fb_n, k_i1, k_i2 = feedback_masks(cfg, key, votes, y)
+    y_neg, fb_t, fb_n, k1s, k2s = feedback_masks(cfg, key, votes, y)
 
     pol = clause_polarity(cfg.n_clauses)                               # (M,)
     pos = (pol > 0)[None, :]                                           # (1, M)
@@ -129,8 +168,8 @@ def feedback_update(cfg: TMConfig, state: TMState, key: jax.Array,
     inc_t = (state.ta > cfg.n_states)[y].astype(jnp.int8)              # (B, M, 2F)
     inc_n = (state.ta > cfg.n_states)[y_neg].astype(jnp.int8)
 
-    d1_t = _type_i_delta(k_i1, cl_t, x_literals, cfg.s, boost_tpf)     # (B, M, 2F)
-    d1_n = _type_i_delta(k_i2, cl_n, x_literals, cfg.s, boost_tpf)
+    d1_t = _type_i_delta(k1s, cl_t, x_literals, cfg.s, boost_tpf)      # (B, M, 2F)
+    d1_n = _type_i_delta(k2s, cl_n, x_literals, cfg.s, boost_tpf)
 
     # Type II needs the per-sample include mask of the addressed class.
     d2_t = ((cl_t[:, :, None] == 1) & (x_literals[:, None, :] == 0)

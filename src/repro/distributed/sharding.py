@@ -11,10 +11,38 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["make_rules", "named_sharding", "constrainer", "batch_axes"]
+__all__ = ["make_rules", "named_sharding", "constrainer", "batch_axes",
+           "data_mesh", "DATA_AXIS"]
+
+# the one mesh axis name the TM data-parallel paths shard over; kept in
+# sync with make_rules' "data" dp axis so rules built from a data_mesh
+# route "batch" onto it
+DATA_AXIS = "data"
+
+
+def data_mesh(n_devices: int | None = None, *, devices=None) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the first ``n_devices`` local devices.
+
+    The mesh every TM data-parallel path (the ``sharded`` TrainEngine,
+    ``ShardedEngine`` serving) builds by default.  ``n_devices=None``
+    takes every local device; an explicit count larger than what the host
+    exposes is an error — elastic callers (``TMServer.restore``) clamp
+    before calling, because TM training is mesh-size invariant (D-way and
+    1-way produce bit-identical states, see ``tests/test_multihost.py``).
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"data_mesh({n_devices}) but only {len(devs)} local "
+                f"device(s); pass n_devices<={len(devs)} or simulate more "
+                "with --xla_force_host_platform_device_count")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), (DATA_AXIS,))
 
 
 def make_rules(mesh: Mesh | None, overrides: tuple[tuple[str, Any], ...] = ()

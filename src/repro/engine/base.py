@@ -526,14 +526,18 @@ class DonatingEngine:
 
 
 def get_engine(name: str, cfg: TMConfig, state: TMState, *,
-               shard_batch: bool = False, cache: bool = True,
+               shard_batch=False, cache: bool = True,
                donate_literals: bool = False, **opts) -> VoteEngine:
     """Build (or fetch from cache) the named backend's engine.
 
     ``shard_batch=True`` wraps ``infer`` in a ``shard_map`` over the batch
-    axis across all local devices (multi-device serving); extra ``opts``
-    are forwarded to the backend constructor (e.g. ``pdl=PDLConfig(...)``
-    or ``device=PDLDevice(...)`` for ``time_domain``).
+    axis across all local devices (multi-device serving); a
+    ``jax.sharding.Mesh`` serves over that specific 1-D mesh instead
+    (``Mesh`` is hashable, so mesh-wrapped engines cache normally — this
+    is how a mesh-configured ``TMServer`` keys its sharded bucket
+    engines).  Extra ``opts`` are forwarded to the backend constructor
+    (e.g. ``pdl=PDLConfig(...)`` or ``device=PDLDevice(...)`` for
+    ``time_domain``).
 
     Tunable backends (``mxu_fused``, ``swar_fused``) whose tile opts are
     not given explicitly get them from the autotune cache
@@ -564,7 +568,8 @@ def get_engine(name: str, cfg: TMConfig, state: TMState, *,
     engine = _VOTE_REGISTRY.build(name, cfg, state, **opts)
     if shard_batch:
         from .sharding import ShardedEngine
-        engine = ShardedEngine(engine)
+        mesh = shard_batch if not isinstance(shard_batch, bool) else None
+        engine = ShardedEngine(engine, mesh=mesh)
     if donate_literals:
         engine = DonatingEngine(engine)
     if key is not None:

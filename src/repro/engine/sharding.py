@@ -25,9 +25,16 @@ __all__ = ["ShardedEngine"]
 
 
 class ShardedEngine:
-    """Serve ``inner.infer`` data-parallel over the batch axis."""
+    """Serve ``inner.infer`` data-parallel over the batch axis.
 
-    def __init__(self, inner: VoteEngine, devices=None):
+    ``mesh=`` serves over an existing 1-D mesh (e.g.
+    :func:`repro.distributed.sharding.data_mesh` — the one a
+    mesh-configured ``TMServer`` routes its stage-B buckets through);
+    ``devices=`` builds a private ``("batch",)`` mesh over those devices;
+    neither takes every local device.
+    """
+
+    def __init__(self, inner: VoteEngine, devices=None, *, mesh=None):
         if getattr(inner, "noise_key", None) is not None:
             # every shard would draw the same jitter from the closed-over
             # key, silently diverging from the unsharded engine
@@ -38,12 +45,19 @@ class ShardedEngine:
         self.inner = inner
         self.cfg = inner.cfg
         self.name = f"{inner.name}+shard_batch"
-        devs = list(devices) if devices is not None else jax.devices()
-        self.n_devices = len(devs)
-        self.mesh = Mesh(np.array(devs), ("batch",))
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    f"ShardedEngine needs a 1-D mesh, got {mesh.axis_names}")
+            self.mesh = mesh
+        else:
+            devs = list(devices) if devices is not None else jax.devices()
+            self.mesh = Mesh(np.array(devs), ("batch",))
+        axis = self.mesh.axis_names[0]
+        self.n_devices = self.mesh.shape[axis]
         self._sharded = shard_map(
             inner.infer, mesh=self.mesh,
-            in_specs=P("batch"), out_specs=P("batch"), check_rep=False)
+            in_specs=P(axis), out_specs=P(axis), check_rep=False)
 
     def infer(self, literals: jax.Array) -> EngineResult:
         """(B, 2F) literals → the inner engine's result, batch-sharded

@@ -70,15 +70,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from repro.core.popcount import pack_bits
 from repro.core.tm import TMConfig, TMState, clause_polarity
-from repro.core.tm_train import feedback_masks, feedback_update, train_step
+from repro.core.tm_train import (feedback_draws, feedback_masks,
+                                 feedback_thresholds, feedback_update,
+                                 train_step)
+from repro.distributed.sharding import data_mesh
 from repro.kernels.clause_eval import make_vote_matrix
 from repro.kernels.ell_gather import ell_clause_votes
 from repro.kernels.ops import on_tpu
 from repro.kernels.swar_fused import swar_fused_votes_pallas
 from repro.kernels.train_fused import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_M,
-                                       train_deltas)
+                                       feedback_polarity_masks, train_deltas)
 
 from .backends import swar_clauses_votes
 from .base import KeyedEngineCache, Registry, _cache_key
@@ -89,8 +95,8 @@ __all__ = ["TrainEngine", "register_train_backend", "get_train_engine",
            "available_train_backends", "clear_train_engine_cache",
            "train_engine_cache_info", "DEFAULT_TRAIN_BACKEND",
            "ReferenceTrainEngine", "PackedTrainEngine", "FusedTrainEngine",
-           "SparseTrainEngine", "export_key_cursor", "import_key_cursor",
-           "train_engine_opts"]
+           "SparseTrainEngine", "ShardedTrainEngine", "export_key_cursor",
+           "import_key_cursor", "train_engine_opts"]
 
 DEFAULT_TRAIN_BACKEND = "reference"
 TRAIN_ENGINE_CACHE_SIZE = 8
@@ -228,21 +234,19 @@ def _deltas_from_votes(cfg, state, key, x, y, votes, *, boost_tpf,
     tail return bitwise-identical states for the same key — that is the
     whole delta-exactness argument for ``sparse`` vs ``fused``.
     """
-    b = x.shape[0]
     c, m = cfg.n_classes, cfg.n_clauses
     inc8 = (state.ta > cfg.n_states).astype(jnp.int8)            # (C, M, L)
-    y_neg, fb_t, fb_n, k_i1, k_i2 = feedback_masks(cfg, key, votes, y)
+    y_neg, fb_t, fb_n, k1s, k2s = feedback_masks(cfg, key, votes, y)
     # the raw words jax.random.uniform would float-convert — the kernel
-    # compares them against exact integer thresholds instead
-    bits1 = jax.random.bits(k_i1, (b, m, cfg.n_literals), jnp.uint32)
-    bits2 = jax.random.bits(k_i2, (b, m, cfg.n_literals), jnp.uint32)
+    # compares them against exact integer thresholds instead; generated
+    # per row from the per-row keys, the sharding-invariant draw shape
+    gen = jax.vmap(lambda k: jax.random.bits(k, (m, cfg.n_literals),
+                                             jnp.uint32))
+    bits1 = gen(k1s)
+    bits2 = gen(k2s)
 
     pos = (clause_polarity(m) > 0)[None, :]                      # (1, M)
-    # target class: Type I on + clauses, Type II on −; negative class swaps
-    m1_t = fb_t & pos
-    m2_t = fb_t & ~pos
-    m1_n = fb_n & ~pos
-    m2_n = fb_n & pos
+    m1_t, m2_t, m1_n, m2_n = feedback_polarity_masks(fb_t, fb_n, pos)
 
     p_inc = 1.0 if boost_tpf else (cfg.s - 1.0) / cfg.s
     upd = train_deltas(x, bits1, bits2, inc8[y], inc8[y_neg],
@@ -286,6 +290,185 @@ def _sparse_step(cfg, state, key, x, y, indices, *, boost_tpf, block_b,
     return _deltas_from_votes(cfg, state, key, x, y, votes,
                               boost_tpf=boost_tpf, block_b=block_b,
                               block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "boost_tpf",
+                                             "block_b", "block_m",
+                                             "interpret"))
+def _sharded_step(cfg, state, key, x, y, pos_mask, neg_mask, *, mesh,
+                  boost_tpf, block_b, block_m, interpret):
+    """Data-parallel train step over a 1-D mesh, bit-identical to
+    ``_fused_step`` for any device count.
+
+    The exactness argument has three legs:
+
+    1. **Per-row randomness.**  The small draws (negative-class offsets,
+       feedback uniforms, per-row threefry keys) come from one global
+       :func:`feedback_draws` call outside the ``shard_map`` — exactly
+       the fused backend's splits.  The *large* draw — the (M, 2F)
+       Type I uniform words per row — is generated inside the body from
+       each row's own key, so a shard generates only its rows' words yet
+       every row sees byte-identical randomness under any mesh size.
+       (Generating the words globally instead would replicate the full
+       (B, M, 2F) generation onto every device: GSPMD cannot partition
+       a bulk RNG op, a D× fixed cost that dwarfed the training math.)
+    2. **Row-local body.**  Clause eval, class sums, feedback thresholds,
+       polarity routing, and per-sample deltas are all row-local, so each
+       shard computes exactly the rows the single-host step would.
+    3. **Exact reduction.**  Deltas are integers in {−1, 0, 1} summed per
+       class; ``jax.lax.psum_scatter`` of the per-shard integer partial
+       sums is associative-exact, so the reduction equals the single-host
+       segment-sum bitwise.
+
+    The *state* legs are sharded over classes, not rows: each device
+    packs the include mask / clause words for its ``Cp/D`` class slice
+    and ``all_gather``s the (small, bit-packed) results, and the final
+    ``clip`` of the reduce-scattered update runs on the same class slice
+    before a tiled gather reassembles the replicated state.  Everything
+    O(C·M·L) therefore costs each device 1/D of the single-host step —
+    computed replicated, those legs alone would make the shard seam a
+    D× slowdown on a simulated (serialised) mesh.  Classes pad to a
+    device multiple with never-addressed all-exclude rows (``ta = 1``;
+    ``y``/``y_neg`` are always < C).
+
+    Ragged batches pad the *drawn* arrays to a device multiple with
+    neutral rows — ``u = 2.0`` (> any activation probability, so the
+    feedback masks are all-False), zero literals/labels, and row 0's key
+    repeated — whose deltas are provably zero, so padding never perturbs
+    real rows.
+    """
+    b = x.shape[0]
+    c, m = cfg.n_classes, cfg.n_clauses
+    axis = mesh.axis_names[0]
+    d = mesh.shape[axis]
+
+    offs, u, k1s, k2s = feedback_draws(cfg, key, b)
+
+    bp = -(-b // d) * d
+    if bp != b:
+        pad = bp - b
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+        offs = jnp.pad(offs, (0, pad), constant_values=1)
+        u = jnp.pad(u, ((0, pad), (0, 0), (0, 0)), constant_values=2.0)
+        # padded rows repeat row 0's key — harmless, their u = 2.0 rows
+        # yield all-False feedback masks so the drawn words are never used
+        padk = jnp.broadcast_to(k1s[:1], (pad,))
+        k1s = jnp.concatenate([k1s, padk])
+        k2s = jnp.concatenate([k2s, padk])
+
+    pos = (clause_polarity(m) > 0)[None, :]                      # (1, M)
+    p_inc = 1.0 if boost_tpf else (cfg.s - 1.0) / cfg.s
+
+    cp = -(-c // d) * d                                          # class pad
+    cs = cp // d                                                 # per-device
+    ta = state.ta if cp == c else jnp.pad(
+        state.ta, ((0, cp - c), (0, 0), (0, 0)), constant_values=1)
+
+    # a literal collects at most one target + one negative contribution
+    # per row, so the cross-shard reduction stays exact in int16 while
+    # 2B < 2¹⁵ — half the collective payload; absurd batches widen
+    narrow = bp < 2 ** 14
+
+    def body(ta_s, pm, nm, x_s, y_s, offs_s, u_s, k1_s, k2_s):
+        # class-sharded state prep: pack this device's class slice, then
+        # gather the bit-packed words (every shard evals all clauses)
+        inc_s = (ta_s > cfg.n_states).astype(jnp.int8)           # (cs, M, L)
+        words_s = pack_bits(inc_s.reshape(cs * m, cfg.n_literals))
+        inc = jax.lax.all_gather(inc_s, axis, tiled=True)        # (Cp, M, L)
+        words = jax.lax.all_gather(words_s, axis, tiled=True)    # (CpM, Wl)
+
+        _, votes = swar_clauses_votes(words, pm, nm, x_s, c=cp, m=m)
+        y_neg, fb_t, fb_n = feedback_thresholds(cfg, votes, y_s, offs_s, u_s)
+        m1_t, m2_t, m1_n, m2_n = feedback_polarity_masks(fb_t, fb_n, pos)
+        # each shard generates only its own rows' uniform words — the
+        # per-row threefry draw is bit-identical to the fused backend's
+        gen = jax.vmap(lambda k: jax.random.bits(k, (m, cfg.n_literals),
+                                                 jnp.uint32))
+        upd = train_deltas(x_s, gen(k1_s), gen(k2_s), inc[y_s], inc[y_neg],
+                           m1_t, m2_t, m1_n, m2_n, y_s, y_neg,
+                           n_classes=cp, p_inc=p_inc, p_dec=1.0 / cfg.s,
+                           block_b=block_b, block_m=block_m,
+                           interpret=interpret, widen=not narrow)
+        # reduce-scatter the class-segmented partials so the O(C·M·L)
+        # clip runs on each device's class slice, then reassemble
+        upd_s = jax.lax.psum_scatter(upd, axis, scatter_dimension=0,
+                                     tiled=True)                 # (cs, M, L)
+        return jnp.clip(ta_s + upd_s.astype(jnp.int32),
+                        1, 2 * cfg.n_states)
+
+    # ta crosses the boundary class-sharded in *and* out: consecutive
+    # sharded steps (the serving loop, the train_epoch scan) hand the
+    # state from shard to shard with no broadcast or gather at all —
+    # JAX reassembles the replicated view lazily only when a consumer
+    # (inference, checkpointing) actually reads it
+    rep, sh = P(), P(axis)
+    ta = shard_map(body, mesh=mesh,
+                   in_specs=(sh, rep, rep, sh, sh, sh, sh, sh, sh),
+                   out_specs=sh, check_rep=False)(
+        ta, pos_mask, neg_mask, x, y, offs, u, k1s, k2s)
+    return TMState(ta=ta[:c])
+
+
+@register_train_backend("sharded")
+class ShardedTrainEngine:
+    """Data-parallel training over the batch axis of a ``("data",)`` mesh.
+
+    ``shard_map``s the fused clause-eval + delta body across the mesh and
+    ``psum``s the class-free per-shard delta sums — the Abeyrathna et al.
+    "massively parallel" batch update made literal.  Bit-identical to the
+    single-host ``fused`` backend for *any* device count (the whole
+    contract — see :func:`_sharded_step` — is property-tested in
+    ``tests/test_multihost.py`` for D ∈ {1, 2, 4, 8}), so mesh size is a
+    pure throughput knob and a checkpoint trained on one mesh resumes
+    bit-exactly on another (``tests/test_elastic_restore.py``).
+
+    ``mesh=`` shards over an existing 1-D mesh; ``n_devices=`` builds a
+    :func:`repro.distributed.sharding.data_mesh` over that many local
+    devices (``None`` = all).  Fully traceable — no host callbacks — so
+    the ``train_epoch`` ``lax.scan`` path shards each scanned step.
+    ``block_b``/``block_m`` tile the delta kernel per shard (autotune key
+    ``train:sharded``).
+    """
+
+    def __init__(self, cfg: TMConfig, *, boost_tpf: bool = True,
+                 n_devices: int | None = None, mesh=None,
+                 block_b: int = DEFAULT_BLOCK_B,
+                 block_m: int = DEFAULT_BLOCK_M):
+        self.cfg = cfg
+        self.boost_tpf = boost_tpf
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    f"sharded training needs a 1-D mesh, got "
+                    f"{mesh.axis_names}")
+            self.mesh = mesh
+        else:
+            self.mesh = data_mesh(n_devices)
+        self.n_devices = self.mesh.shape[self.mesh.axis_names[0]]
+        self._blocks = (block_b, block_m)
+        pol = clause_polarity(cfg.n_clauses)
+        self._pos_mask = pack_bits((pol > 0).astype(jnp.int8))   # (Wm,)
+        self._neg_mask = pack_bits((pol < 0).astype(jnp.int8))
+
+    def step(self, state: TMState, key: jax.Array, x_literals: jax.Array,
+             y: jax.Array) -> TMState:
+        """One mesh-sharded update (see :class:`TrainEngine`)."""
+        return _sharded_step(self.cfg, state, key, x_literals, y,
+                             self._pos_mask, self._neg_mask,
+                             mesh=self.mesh, boost_tpf=self.boost_tpf,
+                             block_b=self._blocks[0],
+                             block_m=self._blocks[1],
+                             interpret=not on_tpu())
+
+    def lifecycle_opts(self) -> dict:
+        """Constructor opts to persist in a checkpoint (see
+        :func:`train_engine_opts`).  Persists the mesh *size*, not the
+        mesh: devices are host-local, and a restore host clamps or
+        overrides the size (elastic restore) — safe because training is
+        mesh-size invariant."""
+        return {"boost_tpf": self.boost_tpf, "n_devices": self.n_devices,
+                "block_b": self._blocks[0], "block_m": self._blocks[1]}
 
 
 @register_train_backend("reference")

@@ -57,10 +57,30 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["train_deltas", "train_deltas_pallas", "uniform_threshold",
-           "DEFAULT_BLOCK_B", "DEFAULT_BLOCK_M"]
+           "feedback_polarity_masks", "DEFAULT_BLOCK_B", "DEFAULT_BLOCK_M"]
 
 DEFAULT_BLOCK_B = 64        # batch tile (reduction axis of the segment-sum)
 DEFAULT_BLOCK_M = 128       # clause tile
+
+
+def feedback_polarity_masks(fb_t: jax.Array, fb_n: jax.Array,
+                            pos: jax.Array) -> tuple:
+    """Route feedback activations to Type I/II by clause polarity.
+
+    fb_t/fb_n (B, M) bool — target/negative-class feedback activations
+    (from ``repro.core.tm_train.feedback_thresholds``); pos (1, M) bool —
+    positive-polarity clause mask → the four ``(m1_t, m2_t, m1_n, m2_n)``
+    masks :func:`train_deltas` consumes: the target class sends Type I to
+    positive clauses and Type II to negative ones, the negative class
+    swaps the roles.  Row-local, so single-host and per-shard callers
+    produce identical masks for identical rows — the one routing table
+    both the fused and sharded train steps share.
+    """
+    m1_t = fb_t & pos
+    m2_t = fb_t & ~pos
+    m1_n = fb_n & ~pos
+    m2_n = fb_n & pos
+    return m1_t, m2_t, m1_n, m2_n
 
 
 def uniform_threshold(p: float) -> int:
@@ -208,7 +228,7 @@ def train_deltas_pallas(literals: jax.Array, bits1: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("n_classes", "p_inc", "p_dec",
                                              "block_b", "block_m",
-                                             "interpret"))
+                                             "interpret", "widen"))
 def train_deltas(literals: jax.Array, bits1: jax.Array, bits2: jax.Array,
                  inc_t: jax.Array, inc_n: jax.Array,
                  m1_t: jax.Array, m2_t: jax.Array,
@@ -217,7 +237,7 @@ def train_deltas(literals: jax.Array, bits1: jax.Array, bits2: jax.Array,
                  p_inc: float, p_dec: float,
                  block_b: int = DEFAULT_BLOCK_B,
                  block_m: int = DEFAULT_BLOCK_M,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = True, widen: bool = True) -> jax.Array:
     """Fused Type I/II feedback deltas, summed per class over the batch.
 
     literals (B, L) {0,1} int8; bits1/bits2 (B, M, L) uint32 — the raw
@@ -237,21 +257,32 @@ def train_deltas(literals: jax.Array, bits1: jax.Array, bits2: jax.Array,
     interpret mode runs the identical body as straight-line XLA (the
     Pallas interpreter's per-grid-step slicing costs more than the math
     on CPU).  Both paths are bit-identical.
+
+    ``widen=False`` returns the int16 per-element sums directly (exact
+    while 2B < 2¹⁵ — a literal can collect at most one target and one
+    negative contribution per row) instead of widening to int32 — the
+    sharded trainer reduce-scatters the partials across shards first and
+    widens after, halving the collective payload.
     """
     if not interpret:
-        return train_deltas_pallas(
+        upd = train_deltas_pallas(
             literals, bits1, bits2, inc_t, inc_n, m1_t, m2_t, m1_n, m2_n,
             y, y_neg, n_classes=n_classes, p_inc=p_inc, p_dec=p_dec,
             block_b=block_b, block_m=block_m, interpret=False)
+        return upd if widen else upd.astype(jnp.int16)
     d_t, d_n = _delta_body(literals, bits1, bits2, inc_t, inc_n,
                            m1_t, m2_t, m1_n, m2_n,
                            t_inc=uniform_threshold(p_inc),
                            t_dec=uniform_threshold(p_dec))
     b, m, l = d_t.shape
-    # class-free scatters in int16 (per-element segment sums are ≤ B each,
-    # far under 2¹⁵), widened to int32 only at the end
-    upd = jax.ops.segment_sum(d_t.reshape(b, m * l), y,
-                              num_segments=n_classes)
-    upd += jax.ops.segment_sum(d_n.reshape(b, m * l), y_neg,
-                               num_segments=n_classes)
+    # one class-free scatter over the 2B concatenated target/negative
+    # streams in int16 (per-element sums are ≤ 2B, far under 2¹⁵ for sane
+    # batches) — a single segment_sum zero-inits and walks the (C, M·L)
+    # output once instead of twice, which matters when this runs once per
+    # shard of a data-parallel mesh
+    upd = jax.ops.segment_sum(
+        jnp.concatenate([d_t.reshape(b, m * l), d_n.reshape(b, m * l)]),
+        jnp.concatenate([y, y_neg]), num_segments=n_classes)
+    if not widen:
+        return upd.reshape(n_classes, m, l)
     return upd.astype(jnp.int32).reshape(n_classes, m, l)

@@ -88,12 +88,34 @@ closed-loop ``--clients`` are distributed round-robin, open-loop
 
     PYTHONPATH=src python -m repro.launch.tm_serve \
         --models fleet.json --clients 16 --duration 10
+
+Multi-host data parallelism (docs/operations.md "Multi-host serving"):
+``--mesh N`` shards every serving batch and (with ``--train-backend
+sharded``) every labeled update across N devices on a 1-D ``data`` mesh
+— post-update states stay bit-identical to the single-host run for any
+N.  ``--host-devices N`` simulates an N-device host on CPU (sets
+``XLA_FLAGS`` before the first JAX import, so it must come from this
+flag or the environment — never after jax loads).  ``--ckpt-role``
+selects the checkpoint discipline for multi-process launches sharing
+one directory: the ``leader`` (default) writes snapshots as usual;
+a ``follower`` never writes — it waits for the leader's first valid
+``.complete`` marker, restores it, and serves:
+
+    # leader: train + write checkpoints on a simulated 8-device mesh
+    PYTHONPATH=src python -m repro.launch.tm_serve --host-devices 8 \
+        --mesh 8 --train-backend sharded \
+        --checkpoint-dir /tmp/tm-ckpt --checkpoint-every 50
+    # follower on another host (any mesh size — restore is elastic):
+    PYTHONPATH=src python -m repro.launch.tm_serve --host-devices 4 \
+        --mesh 4 --ckpt-role follower --checkpoint-dir /tmp/tm-ckpt
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import os
+import sys
 import time
 
 import numpy as np
@@ -259,7 +281,8 @@ async def _run_fleet(args) -> None:
                          pipeline_depth=args.pipeline_depth)
     fleet = TMFleet(specs, policy, pack=not args.no_pack,
                     cache_entries=args.cache_entries or None,
-                    cache_bytes=args.cache_bytes or None)
+                    cache_bytes=args.cache_bytes or None,
+                    mesh=args.mesh or None)
     names = fleet.model_names()
     pools = {}
     for i, name in enumerate(names):
@@ -363,15 +386,31 @@ async def _run(args) -> None:
                                  .infer(jnp.asarray(probe_lits)).prediction)
             probe = (probe_lits, probe_y)
 
+    follower = args.ckpt_role == "follower"
+    if follower and not args.checkpoint_dir:
+        raise SystemExit("--ckpt-role follower needs --checkpoint-dir")
     server = TMServer(cfg, state, policy,
                       train_backend=args.train_backend or None,
                       train_seed=args.seed,
-                      checkpoint_dir=args.checkpoint_dir,
-                      checkpoint_every_updates=args.checkpoint_every,
+                      checkpoint_dir=None if follower
+                      else args.checkpoint_dir,
+                      checkpoint_every_updates=0 if follower
+                      else args.checkpoint_every,
                       checkpoint_keep=args.checkpoint_keep,
                       history_size=args.history_size,
-                      probe=probe, probe_every_updates=args.probe_every)
-    if args.restore:
+                      probe=probe, probe_every_updates=args.probe_every,
+                      mesh=args.mesh or None)
+    if follower:
+        # followers never write to the shared directory — they wait for
+        # the leader's atomic rename to land a ``.complete`` marker,
+        # then restore (elastically, onto whatever --mesh this host has)
+        from repro import checkpoint as ckpt
+        step = ckpt.wait_for_complete(args.checkpoint_dir,
+                                      timeout=args.ckpt_wait)
+        version = server.restore(args.checkpoint_dir)
+        print(f"follower: restored step_{step} from {args.checkpoint_dir} "
+              f"at state version {version} (read-only)")
+    elif args.restore:
         if not args.checkpoint_dir:
             raise SystemExit("--restore needs --checkpoint-dir")
         version = server.restore()
@@ -497,6 +536,24 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--restore", action="store_true",
                     help="resume from the newest valid snapshot in "
                          "--checkpoint-dir before serving")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="data-parallel mesh size: shard serving batches "
+                         "(and 'sharded' training) over N devices on a "
+                         "1-D 'data' mesh (0 = unsharded)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="simulate an N-device host on CPU (sets "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count before the first jax import; 0 = leave "
+                         "the environment alone)")
+    ap.add_argument("--ckpt-role", choices=("leader", "follower"),
+                    default="leader",
+                    help="multi-process checkpoint discipline for a "
+                         "shared --checkpoint-dir: the leader writes, "
+                         "a follower waits for a valid snapshot, "
+                         "restores it, and never writes")
+    ap.add_argument("--ckpt-wait", type=float, default=60.0,
+                    help="follower: seconds to wait for the leader's "
+                         "first valid checkpoint before giving up")
     ap.add_argument("--history-size", type=int, default=8,
                     help="bounded in-memory ring of recent (version, "
                          "state) rollback targets")
@@ -538,6 +595,20 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--stats-every", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.host_devices:
+        # XLA only reads this at backend init — it must land before the
+        # first jax import anywhere in the process
+        if "jax" in sys.modules:
+            raise SystemExit(
+                "--host-devices: jax is already imported; set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N in the "
+                "environment instead")
+        flag = ("--xla_force_host_platform_device_count="
+                f"{args.host_devices}")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+    if args.mesh and args.mesh < 1:
+        raise SystemExit("--mesh must be >= 1")
     asyncio.run(_run(args))
 
 

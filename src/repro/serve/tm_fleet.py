@@ -153,7 +153,7 @@ class _PackGroup:
 
     __slots__ = ("key", "members", "server")
 
-    def __init__(self, key, members, policy, executor):
+    def __init__(self, key, members, policy, executor, mesh=None):
         self.key = key
         self.members = list(members)        # _Model records, in order
         self._assign_segments()
@@ -164,7 +164,7 @@ class _PackGroup:
             n_states=cfg0.n_states, T=cfg0.T, s=cfg0.s)
         self.server = TMServer(
             fused_cfg, fuse_states([m.server.state for m in self.members]),
-            _group_policy(policy), executor=executor)
+            _group_policy(policy), executor=executor, mesh=mesh)
 
     def _assign_segments(self) -> None:
         lo = 0
@@ -202,7 +202,10 @@ class TMFleet:
     the process-wide engine-cache budget (see
     :func:`repro.engine.set_engine_cache_budget`); ``weights`` pins
     static eviction weights per model name, otherwise each model's
-    measured request share is registered automatically.
+    measured request share is registered automatically.  ``mesh=``
+    forwards a fleet-wide data-parallel mesh to every member server and
+    pack group (see ``TMServer``'s ``mesh=``); :meth:`restore` can
+    retarget a member's mesh elastically.
 
     Use as an async context manager like ``TMServer``.  Per-request API
     is :meth:`submit` / :meth:`submit_labeled` with the model name
@@ -212,6 +215,7 @@ class TMFleet:
 
     def __init__(self, models: dict, policy: ServePolicy | None = None, *,
                  pack: bool = True,
+                 mesh=None,
                  cache_entries: int | None = None,
                  cache_bytes: int | None = None,
                  weights: dict[str, float] | None = None,
@@ -220,6 +224,11 @@ class TMFleet:
             raise ValueError("TMFleet needs at least one model")
         self.policy = policy or ServePolicy()
         self.pack = bool(pack)
+        # fleet-wide data-parallel mesh: forwarded to every member
+        # TMServer (a per-model spec's own mesh= wins) and to each pack
+        # group's fused server, so packed buckets shard exactly like
+        # solo ones
+        self.mesh = mesh
         self._mu = threading.Lock()
         self._models: dict[str, _Model] = {}
         self._groups: list[_PackGroup] = []
@@ -253,6 +262,8 @@ class TMFleet:
             cfg, state = spec
             kw = {}
         weight = kw.pop("weight", self._weights_cfg.get(name))
+        if self.mesh is not None:
+            kw.setdefault("mesh", self.mesh)
         server = TMServer(
             cfg, state, self.policy, executor=self._pool,
             on_publish=lambda v, s, _n=name: self._member_published(_n, v, s),
@@ -270,7 +281,8 @@ class TMFleet:
         for key, members in by_key.items():
             if len(members) < 2:
                 continue
-            group = _PackGroup(key, members, self.policy, self._pool)
+            group = _PackGroup(key, members, self.policy, self._pool,
+                               mesh=self.mesh)
             for m in members:
                 m.group = group
             self._groups.append(group)
@@ -432,10 +444,15 @@ class TMFleet:
         return self._entry(model).server.checkpoint(directory, block=block)
 
     def restore(self, model: str, directory: str | None = None, *,
-                step: int | None = None) -> int:
+                step: int | None = None, mesh=None, shardings=None) -> int:
         """Restore ``model`` from its checkpoint directory (before
-        :meth:`start`); its pack group republishes the restored state."""
-        return self._entry(model).server.restore(directory, step=step)
+        :meth:`start`); its pack group republishes the restored state.
+        ``mesh=``/``shardings=`` retarget the member's data-parallel
+        mesh at restore time (elastic re-shard — see
+        :meth:`TMServer.restore`)."""
+        return self._entry(model).server.restore(directory, step=step,
+                                                 mesh=mesh,
+                                                 shardings=shardings)
 
     def rollback(self, model: str, version: int) -> int:
         """Re-publish one model's historical version (see
@@ -489,7 +506,7 @@ class TMFleet:
             self._groups.remove(group)
             if len(survivors) >= 2:
                 regrouped = _PackGroup(group.key, survivors, self.policy,
-                                       self._pool)
+                                       self._pool, mesh=self.mesh)
                 for m in survivors:
                     m.group = regrouped
                 self._groups.append(regrouped)

@@ -352,11 +352,22 @@ class TMServer:
     ``probe_every_updates > 0`` scores the held-out probe stream every N
     applied updates (drift monitoring — see :meth:`stats` and
     docs/operations.md).
+
+    ``mesh=`` (a 1-D ``jax.sharding.Mesh``, a device count, or ``None``)
+    turns on data-parallel execution: stage-B bucket engines wrap in
+    :class:`~repro.engine.sharding.ShardedEngine` over the mesh (predict
+    *and* shed tiers, the prebuilt sparse slot included), and a
+    ``train_backend="sharded"`` shards its update step over the same
+    mesh.  Bit-exact vs the single-device server by the sharding
+    contracts (``tests/test_multihost.py``); :meth:`restore` can
+    retarget the mesh at restore time (elastic re-shard, see its
+    docstring and docs/operations.md).
     """
 
     def __init__(self, cfg: TMConfig, state: TMState,
                  policy: ServePolicy | None = None, *,
                  routing: dict[int, str] | None = None,
+                 mesh=None,
                  train_backend: str | None = None, train_seed: int = 0,
                  checkpoint_dir: str | None = None,
                  checkpoint_every_updates: int = 0,
@@ -369,6 +380,22 @@ class TMServer:
                  on_publish=None,
                  executor: ThreadPoolExecutor | None = None):
         self.cfg = cfg
+        # mesh= turns on data-parallel serving *and* training: stage-B
+        # bucket engines wrap in ShardedEngine over this mesh, and a
+        # "sharded" train backend shards its step over it.  Accepts a
+        # 1-D jax Mesh, a device count (→ repro.distributed.data_mesh),
+        # or None (single-device, the default).  Resolved before any
+        # engine is built so the constructor publish already serves
+        # sharded.
+        self._mesh = None
+        if mesh is not None:
+            from jax.sharding import Mesh
+            from repro.distributed.sharding import data_mesh
+            self._mesh = mesh if isinstance(mesh, Mesh) else \
+                data_mesh(int(mesh))
+            if len(self._mesh.axis_names) != 1:
+                raise ValueError(f"TMServer needs a 1-D mesh, got "
+                                 f"{self._mesh.axis_names}")
         # one lock for every counter stats() reads: fan-out, the update
         # path and stats() itself all take it, so a stats() snapshot is
         # internally consistent (satellite: no more field-by-field reads
@@ -411,7 +438,15 @@ class TMServer:
         if train_backend is not None:
             import jax
             from repro.engine import get_train_engine
-            self._train_engine = get_train_engine(train_backend, cfg)
+            # a mesh-configured server shards its training too: the
+            # sharded backend takes the mesh directly (Mesh is hashable,
+            # so the engine caches normally); other backends are
+            # single-device and ignore it
+            topts = {"mesh": self._mesh} \
+                if (self._mesh is not None
+                    and train_backend == "sharded") else {}
+            self._train_engine = get_train_engine(train_backend, cfg,
+                                                  **topts)
             self._train_key = jax.random.key(train_seed)
             # updates get their own thread: a training step overlaps
             # predict compute (stage B) instead of serializing behind it
@@ -581,6 +616,12 @@ class TMServer:
                 self._serve_ell.refresh(inc)
             engine = get_engine("sparse_csr", self.cfg, state, cache=False,
                                 ell=self._serve_ell.layout)
+            if self._mesh is not None:
+                # the one-slot engine bypasses get_engine's shard_batch
+                # wrapping (cache=False + EllLayout opts), so wrap here —
+                # mesh-configured serving must cover the sparse route too
+                from repro.engine.sharding import ShardedEngine
+                engine = ShardedEngine(engine, mesh=self._mesh)
             self._sparse_serving = (state, engine)
         else:
             self._sparse_serving = None
@@ -677,7 +718,12 @@ class TMServer:
                  "cfg": dataclasses.asdict(self.cfg),
                  "train_backend": self._train_backend,
                  "train_opts": {}, "updates": self._n_updates,
-                 "rollbacks": self._n_rollbacks}
+                 "rollbacks": self._n_rollbacks,
+                 # mesh *size* only — metadata for operators and the
+                 # elastic-restore tests; arrays are host-gathered, so
+                 # the snapshot itself is mesh-agnostic
+                 "mesh_devices": (None if self._mesh is None else
+                                  int(self._mesh.devices.size))}
         if self._train_key is not None:
             data, impl = export_key_cursor(self._train_key)
             cursor, extra["has_cursor"], extra["key_impl"] = data, True, impl
@@ -695,7 +741,8 @@ class TMServer:
         return version
 
     def restore(self, directory: str | None = None, *,
-                step: int | None = None) -> int:
+                step: int | None = None, mesh=None,
+                shardings=None) -> int:
         """Resume from a checkpoint → the restored state version.
 
         Loads the newest valid step (or ``step=``), verifies the saved
@@ -707,6 +754,19 @@ class TMServer:
         history ring restarts at the restored pair.  Must be called
         before :meth:`start` (restore swaps state non-atomically with
         respect to a live scheduler).
+
+        **Elastic re-shard**: ``mesh=`` (a 1-D ``Mesh``, a device count,
+        or ``None`` to keep the constructor's) retargets *this* server's
+        mesh before the restored state publishes, so a checkpoint
+        written on mesh A restores onto mesh B — including B =
+        single-host (``mesh=1``).  Safe because snapshots are
+        host-gathered and training is mesh-size invariant (bit-identical
+        states for any D, ``tests/test_elastic_restore.py``).  A
+        ``sharded`` train backend whose recorded ``n_devices`` exceeds
+        this host's devices is clamped (or replaced by the override);
+        ``shardings=`` optionally re-``device_put``s the loaded arrays
+        under NamedShardings for the new mesh (see
+        :func:`repro.checkpoint.restore_tm_lifecycle`).
         """
         if self._task is not None and not self._closed:
             raise RuntimeError("restore() must run before start()")
@@ -714,9 +774,19 @@ class TMServer:
         if directory is None:
             raise ValueError("no checkpoint directory: pass directory= or "
                              "construct TMServer with checkpoint_dir=")
+        import jax
         import jax.numpy as jnp
         from repro import checkpoint as ckpt
-        step, tree, extra = ckpt.restore_tm_lifecycle(directory, step)
+        if mesh is not None:
+            from jax.sharding import Mesh
+            from repro.distributed.sharding import data_mesh
+            self._mesh = mesh if isinstance(mesh, Mesh) else \
+                data_mesh(int(mesh))
+            if len(self._mesh.axis_names) != 1:
+                raise ValueError(f"TMServer needs a 1-D mesh, got "
+                                 f"{self._mesh.axis_names}")
+        step, tree, extra = ckpt.restore_tm_lifecycle(directory, step,
+                                                      shardings=shardings)
         saved_cfg = extra.get("cfg")
         if saved_cfg and saved_cfg != dataclasses.asdict(self.cfg):
             raise ValueError(f"checkpoint step_{step} was written for "
@@ -733,8 +803,20 @@ class TMServer:
                 # when the backend name matches the constructor's, the
                 # saved opts override this host's autotune cache:
                 # restore means resume *that* run, not a local retune
+                topts = dict(extra.get("train_opts", {}))
+                if backend == "sharded":
+                    # mesh size is elastic: the override mesh wins, and
+                    # a recorded size this host can't build clamps to
+                    # the local device count — both resume bit-exactly
+                    if self._mesh is not None:
+                        topts.pop("n_devices", None)
+                        topts["mesh"] = self._mesh
+                    else:
+                        avail = len(jax.devices())
+                        n = topts.get("n_devices") or avail
+                        topts["n_devices"] = min(int(n), avail)
                 self._train_engine = get_train_engine(
-                    backend, self.cfg, **extra.get("train_opts", {}))
+                    backend, self.cfg, **topts)
                 self._train_backend = backend
                 if self._train_pool is None:
                     self._train_pool = ThreadPoolExecutor(
@@ -801,7 +883,8 @@ class TMServer:
             pair = self._sparse_serving
             if pair is not None and pair[0] is st:
                 return pair[1]
-        return get_engine(backend, self.cfg, st)
+        return get_engine(backend, self.cfg, st,
+                          shard_batch=self._mesh or False)
 
     def shed_engine_for(self, bucket: int, state: TMState | None = None):
         """The (cached) overload-tier engine (``policy.shed_backend``).
@@ -814,6 +897,7 @@ class TMServer:
             raise RuntimeError("no shed tier configured (shed_backend=)")
         return get_engine(self.policy.shed_backend, self.cfg,
                           self.state if state is None else state,
+                          shard_batch=self._mesh or False,
                           **self.policy.resolved_shed_opts())
 
     async def warmup(self, *, train_batches: tuple[int, ...] = ()) -> None:
@@ -1421,7 +1505,9 @@ class TMServer:
         many publishes actually changed the route table — density drift
         crossing the heuristic boundary), ``sparse_layout`` (the
         serving ``IncrementalEll``'s refresh counters, ``None`` until a
-        ``sparse_csr`` route exists), and ``probe`` (``None``
+        ``sparse_csr`` route exists), ``mesh`` (device count + axis name
+        of the configured data-parallel mesh, ``None`` single-device),
+        and ``probe`` (``None``
         when drift monitoring is off; otherwise latest/best accuracy,
         ``drift`` = best − latest ≥ 0, ``delta`` = latest − previous,
         window mean, eval count — how an operator reads regression, see
@@ -1499,6 +1585,10 @@ class TMServer:
             "probe": probe_stats,
             "routing": {str(k): v for k, v in sorted(self.routing.items())},
             "routing_updates": snap["routing_updates"],
+            "mesh": (None if self._mesh is None else {
+                "devices": int(self._mesh.devices.size),
+                "axis": self._mesh.axis_names[0],
+            }),
             "sparse_layout": (None if self._serve_ell is None
                               else self._serve_ell.stats()),
             "pipeline": {

@@ -22,6 +22,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Simulate an 8-device host so the multi-host suites (test_multihost.py,
+# test_elastic_restore.py) can build real 2/4/8-way meshes on one CPU.
+# Must happen before the first `import jax` anywhere in the session;
+# appended so an explicit XLA_FLAGS from the caller still applies.
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=8"
+if _FORCE_DEVICES.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE_DEVICES).strip()
+
 _USING_FALLBACK = False
 try:
     import hypothesis  # noqa: F401

@@ -1,0 +1,230 @@
+"""Elastic re-shard restore: checkpoints are mesh-agnostic, bit-exactly.
+
+The acceptance grid (docs/operations.md "Elastic re-shard"): a server
+training with the ``sharded`` backend on a mesh of A devices is killed
+mid-learning; a fresh server restores the checkpoint onto a mesh of B
+devices (including B = 1, single-host) and resumes.  For every
+(A, B) ∈ {1, 4} × {1, 2, 8} the resumed run must be **bit-identical**
+to an uninterrupted single-host ``fused`` run fed the same labeled
+stream — same states, same versions, same predictions, same key-chain
+cursor.  This composes two invariants, each tested on its own
+elsewhere: snapshots are host-gathered (``repro.checkpoint``) and
+sharded training is mesh-size invariant (``tests/test_multihost.py``).
+
+Also here: the follower half of the leader-writes/followers-read
+discipline — ``wait_for_complete`` must ignore torn snapshots (a step
+directory without its ``.complete`` marker) and wake only when the
+leader's atomic rename lands a valid one.
+"""
+
+import asyncio
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.tm import TMConfig, init_tm
+from repro.engine.train import export_key_cursor
+from repro.serve import ServePolicy, TMServer
+
+C, M, F = 3, 8, 9
+MESH_A = (1, 4)
+MESH_B = (1, 2, 8)
+N_BATCHES, ROWS, KILL_AFTER = 6, 8, 3
+
+
+def _tm(seed=3):
+    cfg = TMConfig(n_classes=C, n_clauses=M, n_features=F, T=5, s=3.9)
+    return cfg, init_tm(cfg, jax.random.key(seed))
+
+
+def _batches(cfg, seed=4):
+    rng = np.random.default_rng(seed)
+    lits = rng.integers(0, 2, (N_BATCHES * ROWS, cfg.n_literals),
+                        dtype=np.int8)
+    labels = rng.integers(0, cfg.n_classes, (N_BATCHES * ROWS,),
+                          dtype=np.int32)
+    return [(lits[i * ROWS:(i + 1) * ROWS],
+             labels[i * ROWS:(i + 1) * ROWS]) for i in range(N_BATCHES)]
+
+
+def _policy():
+    return ServePolicy(max_batch=8, backend="oracle")
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """The uninterrupted ground truth: a single-host ``fused`` server fed
+    all six batches (sharded == fused bitwise, so this doubles as a
+    cross-backend check).  Returns per-update predictions, the cursor at
+    the kill point, and the final (state, version, cursor)."""
+    cfg, state = _tm()
+    batches = _batches(cfg)
+    probe = batches[0][0][:5]
+
+    async def run():
+        preds = []
+        async with TMServer(cfg, state, _policy(), train_backend="fused",
+                            train_seed=11) as srv:
+            cursor_mid = None
+            for i, b in enumerate(batches):
+                await srv.submit_labeled(*b)
+                preds.append(np.asarray((await srv.submit(probe)).prediction))
+                if i + 1 == KILL_AFTER:
+                    cursor_mid = export_key_cursor(srv._train_key)[0]
+            return (np.asarray(srv.state.ta), srv.state_version, preds,
+                    np.asarray(cursor_mid),
+                    np.asarray(export_key_cursor(srv._train_key)[0]))
+
+    return asyncio.run(run())
+
+
+@pytest.fixture(scope="module")
+def killed_on_mesh(tmp_path_factory):
+    """One checkpoint directory per mesh-A size: a ``sharded`` mesh-A
+    server runs the first three batches (checkpointing every third
+    update) and is killed.  Returns {A: (dir, preds, cursor_at_kill)}."""
+    out = {}
+    for a in MESH_A:
+        cfg, state = _tm()
+        batches = _batches(cfg)
+        probe = batches[0][0][:5]
+        d = str(tmp_path_factory.mktemp(f"mesh_a{a}") / "ck")
+
+        async def run():
+            preds = []
+            async with TMServer(cfg, state, _policy(),
+                                train_backend="sharded", train_seed=11,
+                                mesh=a, checkpoint_dir=d,
+                                checkpoint_every_updates=KILL_AFTER) as srv:
+                assert srv._train_engine.n_devices == a
+                for b in batches[:KILL_AFTER]:
+                    await srv.submit_labeled(*b)
+                    preds.append(
+                        np.asarray((await srv.submit(probe)).prediction))
+                return preds, np.asarray(export_key_cursor(
+                    srv._train_key)[0])
+
+        preds, cursor = asyncio.run(run())
+        out[a] = (d, preds, cursor)
+    return out
+
+
+def test_pre_kill_runs_match_reference(reference, killed_on_mesh):
+    """Before the kill, every mesh-A run already tracks the fused
+    reference bitwise — predictions and key-chain cursor."""
+    _, _, ref_preds, ref_cursor_mid, _ = reference
+    for a, (d, preds, cursor) in killed_on_mesh.items():
+        for p_ref, p in zip(ref_preds[:KILL_AFTER], preds):
+            np.testing.assert_array_equal(p_ref, p, err_msg=f"A={a}")
+        np.testing.assert_array_equal(ref_cursor_mid, cursor,
+                                      err_msg=f"A={a}")
+        assert ckpt.latest_step(d) == KILL_AFTER
+        extra = ckpt.read_manifest_extra(d, KILL_AFTER)
+        assert extra["train_backend"] == "sharded"
+        assert extra["mesh_devices"] == a
+        assert extra["train_opts"]["n_devices"] == a
+
+
+@pytest.mark.parametrize("b", MESH_B)
+@pytest.mark.parametrize("a", MESH_A)
+def test_elastic_restore_grid(a, b, reference, killed_on_mesh):
+    """Kill on mesh A, restore on mesh B, resume: the full run equals
+    the uninterrupted reference — states, versions, predictions, and
+    the key-chain cursor.  train_seed is wrong on purpose: the restored
+    cursor, not the constructor seed, must drive the resumed chain."""
+    ref_ta, ref_version, ref_preds, _, ref_cursor_end = reference
+    d, _, _ = killed_on_mesh[a]
+    cfg, state = _tm()
+    batches = _batches(cfg)
+    probe = batches[0][0][:5]
+
+    async def resume():
+        preds = []
+        srv = TMServer(cfg, state, _policy(), train_backend="sharded",
+                       train_seed=999, mesh=a)
+        assert srv.restore(d, mesh=b) == KILL_AFTER
+        assert srv._train_engine.n_devices == b
+        assert srv.stats()["mesh"]["devices"] == b
+        async with srv:
+            for batch in batches[KILL_AFTER:]:
+                await srv.submit_labeled(*batch)
+                preds.append(
+                    np.asarray((await srv.submit(probe)).prediction))
+            return (np.asarray(srv.state.ta), srv.state_version, preds,
+                    np.asarray(export_key_cursor(srv._train_key)[0]))
+
+    ta, version, preds, cursor = asyncio.run(resume())
+    assert version == ref_version
+    np.testing.assert_array_equal(ta, ref_ta)
+    for p_ref, p in zip(ref_preds[KILL_AFTER:], preds):
+        np.testing.assert_array_equal(p_ref, p)
+    np.testing.assert_array_equal(cursor, ref_cursor_end)
+
+
+def test_restore_clamps_oversized_recorded_mesh(reference, killed_on_mesh,
+                                                monkeypatch):
+    """A checkpoint recording more devices than this host has must clamp
+    to the local device count (no mesh= override), not crash — the
+    'restore a pod-sized run on a laptop' path.  Simulated by shrinking
+    what the restoring host sees to 2 devices while restoring the
+    4-device checkpoint."""
+    d, _, _ = killed_on_mesh[4]
+    cfg, state = _tm()
+    two = jax.devices()[:2]
+    monkeypatch.setattr(jax, "devices", lambda *a, **k: list(two))
+    srv = TMServer(cfg, state, _policy(), train_backend="sharded")
+    assert srv.restore(d) == KILL_AFTER
+    assert srv._train_engine.n_devices == 2
+
+
+# -- follower fault injection: .complete discipline --------------------
+
+
+def test_follower_ignores_torn_snapshot_and_wakes_on_complete(tmp_path):
+    """A step directory without its ``.complete`` marker (a leader died
+    mid-write, or a rename hasn't landed) must keep the follower
+    waiting; the leader's next atomic save wakes it."""
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_5"))        # torn: no .complete
+    assert ckpt.valid_steps(d) == []
+
+    got = []
+    waiter = threading.Thread(
+        target=lambda: got.append(ckpt.wait_for_complete(d, timeout=30.0,
+                                                         poll=0.01)))
+    waiter.start()
+    time.sleep(0.2)
+    assert not got, "follower must not restore a torn snapshot"
+
+    ckpt.save(d, 5, {"ta": np.zeros((2, 3), np.int32)})   # leader lands
+    waiter.join(timeout=30.0)
+    assert got == [5]
+    assert ckpt.valid_steps(d) == [5]
+
+
+def test_follower_wait_for_specific_step(tmp_path):
+    """An explicit step= waits for that step, not just any snapshot."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"ta": np.zeros((2,), np.int32)})
+    got = []
+    waiter = threading.Thread(
+        target=lambda: got.append(ckpt.wait_for_complete(d, step=2,
+                                                         timeout=30.0,
+                                                         poll=0.01)))
+    waiter.start()
+    time.sleep(0.2)
+    assert not got, "step 1 must not satisfy a wait for step 2"
+    ckpt.save(d, 2, {"ta": np.zeros((2,), np.int32)})
+    waiter.join(timeout=30.0)
+    assert got == [2]
+
+
+def test_follower_wait_times_out(tmp_path):
+    with pytest.raises(TimeoutError, match="no valid checkpoint"):
+        ckpt.wait_for_complete(str(tmp_path), timeout=0.2, poll=0.02)

@@ -1,0 +1,198 @@
+"""Multi-host data-parallel training: mesh size is not a numerics knob.
+
+The ``sharded`` TrainEngine's contract (docs/operations.md "Multi-host
+serving"): for any device count D, any (cfg, state), any labeled batch
+— divisible or ragged — and any fixed PRNG key, the post-step
+``TMState`` is **bitwise-identical** to the single-host ``fused``
+backend.  The contract holds because
+
+- all per-step randomness (negative-class offsets, feedback uniforms,
+  include/exclude bits) is drawn once at the *global* unpadded batch
+  shape outside ``shard_map`` — threefry without the partitionable flag
+  has no prefix property, so per-shard local draws could never agree;
+- ragged batches pad with neutral rows (``u = 2.0`` exceeds every
+  feedback probability, so padded rows contribute all-False masks and
+  exactly zero deltas);
+- per-shard delta segment-sums are small ints reduced with ``psum``
+  (integer addition is associative), so the reduction order D imposes
+  cannot perturb the result.
+
+``tests/conftest.py`` sets ``--xla_force_host_platform_device_count=8``
+before the first JAX import, so D ∈ {1, 2, 4, 8} runs in-process on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tm import TMConfig, TMState
+from repro.core.tm_train import train_epoch
+from repro.distributed.sharding import DATA_AXIS, data_mesh
+from repro.engine import available_train_backends, get_train_engine
+
+DS = (1, 2, 4, 8)
+
+
+def _random_tm(c, m, f, *, density=0.15, seed=0, batch=17, T=5, s=3.9):
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f, T=T, s=s)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, 2 * f)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    lits = rng.integers(0, 2, (batch, 2 * f), dtype=np.int8)
+    lits[0] = 0
+    lits[-1] = 1
+    y = rng.integers(0, c, (batch,), dtype=np.int32)
+    k = min(c, batch)
+    y[:k] = np.arange(k)        # address as many distinct classes as fit
+    return (cfg, TMState(ta=jnp.asarray(ta, jnp.int32)),
+            jnp.asarray(lits), jnp.asarray(y))
+
+
+def _assert_state_equal(a: TMState, b: TMState):
+    np.testing.assert_array_equal(np.asarray(a.ta), np.asarray(b.ta))
+
+
+def test_simulated_mesh_present():
+    """The conftest flag must land before JAX initialises — every test
+    below silently degrades to D=1 without it."""
+    assert len(jax.devices()) >= 8
+    assert "sharded" in available_train_backends()
+
+
+def test_data_mesh_shape_and_validation():
+    mesh = data_mesh(4)
+    assert mesh.axis_names == (DATA_AXIS,)
+    assert mesh.shape[DATA_AXIS] == 4
+    assert data_mesh().shape[DATA_AXIS] == len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        data_mesh(len(jax.devices()) + 1)
+
+
+def test_sharded_engine_rejects_2d_mesh():
+    from jax.sharding import Mesh
+    mesh2d = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                  ("data", "model"))
+    with pytest.raises(ValueError, match="1-D"):
+        get_train_engine("sharded", TMConfig(n_classes=2, n_clauses=4,
+                                             n_features=3), mesh=mesh2d)
+
+
+# -- bitwise parity with the single-host fused backend -----------------
+
+# odd M (unequal ± polarity halves), C=2 (forced negative class), wide F
+SHAPES = [(2, 6, 9), (3, 10, 12), (5, 7, 33)]
+
+
+@pytest.mark.parametrize("d", DS)
+@pytest.mark.parametrize("shape", SHAPES,
+                         ids=lambda s: f"C{s[0]}M{s[1]}F{s[2]}")
+def test_step_parity_vs_fused(shape, d):
+    """One sharded step == one fused step, bitwise, for every D."""
+    cfg, stt, lits, y = _random_tm(*shape, seed=sum(shape), batch=16)
+    key = jax.random.key(sum(shape) + 1)
+    ref = get_train_engine("fused", cfg).step(stt, key, lits, y)
+    eng = get_train_engine("sharded", cfg, n_devices=d)
+    assert eng.n_devices == d
+    _assert_state_equal(eng.step(stt, key, lits, y), ref)
+
+
+@pytest.mark.parametrize("d", (2, 8))
+@pytest.mark.parametrize("density", [0.0, 1.0],
+                         ids=["all_exclude", "all_include"])
+def test_parity_density_extremes(density, d):
+    """Empty (fires-everywhere) and saturated machines are the clause
+    eval boundary cases; the shard seam must not move them."""
+    cfg, stt, lits, y = _random_tm(3, 8, 11, density=density, seed=21,
+                                   batch=16)
+    key = jax.random.key(2)
+    _assert_state_equal(
+        get_train_engine("sharded", cfg, n_devices=d).step(stt, key, lits, y),
+        get_train_engine("fused", cfg).step(stt, key, lits, y))
+
+
+@pytest.mark.parametrize("d", (2, 4))
+def test_parity_no_boost(d):
+    """boost_tpf=False exercises the (s−1)/s Type I include probability."""
+    cfg, stt, lits, y = _random_tm(4, 9, 13, seed=5, batch=16)
+    key = jax.random.key(3)
+    ref = get_train_engine("fused", cfg, boost_tpf=False).step(
+        stt, key, lits, y)
+    eng = get_train_engine("sharded", cfg, boost_tpf=False, n_devices=d)
+    _assert_state_equal(eng.step(stt, key, lits, y), ref)
+
+
+@pytest.mark.parametrize("d", (2, 4, 8))
+@pytest.mark.parametrize("batch", [1, 5, 13, 29])
+def test_parity_non_divisible_batches(batch, d):
+    """Ragged batches (B % D != 0, including B < D) pad with neutral
+    rows that must contribute exactly zero deltas."""
+    cfg, stt, lits, y = _random_tm(3, 10, 12, seed=batch, batch=batch)
+    key = jax.random.key(batch + 7)
+    _assert_state_equal(
+        get_train_engine("sharded", cfg, n_devices=d).step(stt, key, lits, y),
+        get_train_engine("fused", cfg).step(stt, key, lits, y))
+
+
+@pytest.mark.parametrize("d", DS)
+def test_chain_parity_vs_fused(d):
+    """A 4-step update chain stays bitwise-locked at every step — a
+    single-step parity can mask divergence that only compounds."""
+    cfg, stt, lits, y = _random_tm(3, 10, 12, seed=9, batch=16)
+    ref_eng = get_train_engine("fused", cfg)
+    sh_eng = get_train_engine("sharded", cfg, n_devices=d)
+    ref, got = stt, stt
+    key = jax.random.key(4)
+    for _ in range(4):
+        key, k = jax.random.split(key)
+        ref = ref_eng.step(ref, k, lits, y)
+        got = sh_eng.step(got, k, lits, y)
+        _assert_state_equal(got, ref)
+
+
+def test_explicit_mesh_equals_n_devices():
+    """mesh= (an existing 1-D data mesh) and n_devices= are the same
+    engine — TMServer hands its resolved mesh straight through."""
+    cfg, stt, lits, y = _random_tm(3, 8, 10, seed=13, batch=16)
+    key = jax.random.key(5)
+    a = get_train_engine("sharded", cfg, mesh=data_mesh(4))
+    b = get_train_engine("sharded", cfg, n_devices=4)
+    assert a.n_devices == b.n_devices == 4
+    _assert_state_equal(a.step(stt, key, lits, y),
+                        b.step(stt, key, lits, y))
+
+
+def test_train_epoch_scan_path_parity():
+    """The traced ``lax.scan`` epoch path: the sharded step must stay a
+    pure traceable function (no host callbacks) and keep the chain
+    bitwise-locked to the fused epoch, ragged tail and all."""
+    cfg, stt, _, _ = _random_tm(3, 8, 10, seed=17)
+    rng = np.random.default_rng(18)
+    x = jnp.asarray(rng.integers(0, 2, (70, cfg.n_literals), dtype=np.int8))
+    y = jnp.asarray(rng.integers(0, cfg.n_classes, (70,), dtype=np.int32))
+    key = jax.random.key(6)
+    ref = train_epoch(cfg, stt, key, x, y, batch_size=16, backend="fused")
+    got = train_epoch(cfg, stt, key, x, y, batch_size=16, backend="sharded")
+    _assert_state_equal(got, ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.integers(min_value=2, max_value=6),
+       m=st.integers(min_value=2, max_value=14),
+       f=st.integers(min_value=1, max_value=24),
+       batch=st.integers(min_value=1, max_value=24),
+       d=st.sampled_from((2, 4, 8)),
+       density=st.sampled_from((0.0, 0.05, 0.3, 1.0)),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_sharded_parity_property(c, m, f, batch, d, density, seed):
+    """Property: sharded == fused bit-for-bit on arbitrary shapes,
+    batch sizes (ragged included), densities, device counts, and keys."""
+    cfg, stt, lits, y = _random_tm(c, m, f, density=density, seed=seed,
+                                   batch=batch)
+    key = jax.random.key(seed)
+    ref = get_train_engine("fused", cfg).step(stt, key, lits, y)
+    got = get_train_engine("sharded", cfg, n_devices=d).step(stt, key,
+                                                             lits, y)
+    _assert_state_equal(got, ref)

@@ -131,3 +131,66 @@ def test_mini_dryrun_subprocess():
         assert cell["temp"] > 0, key
         # sharded steps must communicate (FSDP gathers / TP reductions)
         assert cell["collectives"] > 0, key
+
+
+# -- TM batch-dim sharding (data mesh + ShardedEngine) -----------------
+#
+# The serving half of the multi-host layer (docs/operations.md
+# "Multi-host serving"): stage-B buckets route through a ShardedEngine
+# over the same 1-D ``data`` mesh the sharded trainer uses, and the
+# sharded plane must be bit-exact with the unsharded engine — the mesh
+# is a throughput knob, never a numerics knob.
+
+
+def test_batch_axes_refuses_non_divisible():
+    """A global batch that doesn't divide the dp extent must resolve to
+    replicated (None) — never silently truncate or mis-shard."""
+    from repro.distributed.sharding import batch_axes, data_mesh
+    mesh = data_mesh(4)
+    rules = {"batch": "data"}
+    assert batch_axes(rules, 8, mesh) == "data"
+    assert batch_axes(rules, 12, mesh) == "data"
+    for bad in (1, 2, 3, 6, 9, 13):
+        assert batch_axes(rules, bad, mesh) is None
+    assert batch_axes(rules, 8, None) is None          # no mesh → no dp
+    assert batch_axes({}, 8, mesh) is None             # no batch rule
+
+
+def _random_tm(c, m, f, *, density=0.15, seed=0):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.tm import TMConfig, TMState
+    cfg = TMConfig(n_classes=c, n_clauses=m, n_features=f)
+    rng = np.random.default_rng(seed)
+    ta = np.where(rng.random((c, m, 2 * f)) < density,
+                  cfg.n_states + 1, cfg.n_states)
+    return cfg, TMState(ta=jnp.asarray(ta, jnp.int32))
+
+
+def _all_inference_backends():
+    from repro.engine import available_backends
+    return available_backends()
+
+
+@pytest.mark.parametrize("batch", [16, 13],
+                         ids=["divisible", "ragged-pads"])
+@pytest.mark.parametrize("backend", _all_inference_backends())
+def test_sharded_engine_bit_exact_all_backends(backend, batch):
+    """ShardedEngine.infer == unsharded infer, bitwise, for every
+    registered backend — including ragged batches whose zero-padded
+    rows must be sliced off, not served."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.engine import get_engine
+    cfg, st = _random_tm(4, 10, 12, seed=7)
+    lits = jnp.asarray(np.random.default_rng(8).integers(
+        0, 2, (batch, cfg.n_literals), dtype=np.int8))
+    ref = get_engine(backend, cfg, st).infer(lits)
+    sharded = get_engine(backend, cfg, st, shard_batch=True)
+    assert sharded.n_devices > 1, "conftest must simulate 8 devices"
+    res = sharded.infer(lits)
+    assert res.prediction.shape[0] == batch
+    np.testing.assert_array_equal(np.asarray(res.prediction),
+                                  np.asarray(ref.prediction))
+    np.testing.assert_array_equal(np.asarray(res.class_sums),
+                                  np.asarray(ref.class_sums))
